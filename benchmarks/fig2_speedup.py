@@ -1,0 +1,28 @@
+"""Paper Fig. 2: convergence + speedup — wall-clock to target accuracy and
+backward-work reduction for KAKURENBO vs Baseline."""
+from benchmarks.common import EPOCHS, csv_row, run_strategy
+
+
+def _time_to_acc(res, target):
+    t = 0.0
+    for h in res["history"]:
+        t += h.wall_time
+        if h.test_acc >= target:
+            return t
+    return float("nan")
+
+
+def main() -> None:
+    base = run_strategy("baseline")
+    kk = run_strategy("kakurenbo")
+    target = 0.9 * base["best_acc"]
+    for name, res in (("fig2/baseline", base), ("fig2/kakurenbo", kk)):
+        tta = _time_to_acc(res, target)
+        print(csv_row(name, res["wall_s"] / EPOCHS * 1e6,
+                      f"time_to_{target:.2f}acc={tta:.1f}s;"
+                      f"bwd_reduction={1 - res['bwd'] / base['bwd']:.3f};"
+                      f"wall_reduction={1 - res['wall_s'] / base['wall_s']:.3f}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Paper Fig. 4: evolution of the hiding fraction and per-epoch speedup."""
+from benchmarks.common import csv_row, run_strategy
+
+
+def main() -> None:
+    base = run_strategy("baseline")
+    kk = run_strategy("kakurenbo")
+    base_epoch = [h.wall_time for h in base["history"]]
+    for h, bt in zip(kk["history"], base_epoch):
+        speedup = bt / h.wall_time if h.wall_time else float("nan")
+        print(csv_row(f"fig4/epoch{h.epoch}", h.wall_time * 1e6,
+                      f"hidden_fraction={h.hidden_fraction:.3f};"
+                      f"epoch_speedup={speedup:.3f}"))
+
+
+if __name__ == "__main__":
+    main()

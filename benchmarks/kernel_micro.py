@@ -1,0 +1,36 @@
+"""Kernel microbenchmarks (interpret-mode timings are NOT TPU-representative;
+included to exercise the kernel paths end-to-end and track regressions)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from benchmarks.common import csv_row
+
+
+def _bench(fn, *args, iters=3):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> None:
+    r = np.random.default_rng(0)
+    lg = jnp.asarray(r.normal(size=(512, 4096)), jnp.float32)
+    lab = jnp.asarray(r.integers(0, 4096, 512), jnp.int32)
+    t = _bench(ops.loss_confidence, lg, lab)
+    print(csv_row("kernel/loss_confidence_512x4096", t, "interpret=True"))
+    loss = jnp.asarray(r.exponential(1, 65536), jnp.float32)
+    valid = jnp.ones(65536, bool)
+    t = _bench(lambda l, v: ops.loss_histogram(l, v, jnp.float32(0),
+                                               jnp.float32(8)), loss, valid)
+    print(csv_row("kernel/histogram_64k", t, "bins=512;interpret=True"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""§Roofline reader: aggregates the dry-run JSONs into the per-cell table."""
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+
+DEFAULT_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun_roofline")
+
+
+def rows(directory: str = DEFAULT_DIR):
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        d = json.load(open(path))
+        name = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
+        if d["status"] != "ok":
+            yield name, 0.0, f"status={d['status']}"
+            continue
+        r = d["roofline"]
+        yield (name, r["step_time_s"] * 1e6,
+               f"bottleneck={r['bottleneck']};"
+               f"t_comp={r['t_compute_s']:.2e};t_mem={r['t_memory_s']:.2e};"
+               f"t_coll={r['t_collective_s']:.2e};"
+               f"useful_ratio={d.get('useful_flops_ratio') or 0:.3f}")
+
+
+def main() -> None:
+    if not os.path.isdir(DEFAULT_DIR):
+        print(csv_row("roofline/missing", 0.0,
+                      f"run `python -m repro.launch.dryrun` first ({DEFAULT_DIR})"))
+        return
+    for name, us, derived in rows():
+        print(csv_row(name, us, derived))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark entrypoint: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Sections:
+  table2  — accuracy vs Baseline for every strategy (paper Table 2)
+  table3  — Grad-Match comparison, single worker (paper Table 3)
+  table5  — prediction-confidence threshold sweep (paper Table 5)
+  table6  — HE/MB/RF/LR component ablation (paper Table 6)
+  fig2    — convergence/speedup (paper Fig. 2)
+  fig4    — hiding-fraction evolution (paper Fig. 4)
+  selection — selection-overhead microbench (paper Table 1 complexity row)
+  kernels — Pallas kernel micro timings
+  roofline — dry-run roofline table (if results/dryrun_roofline exists)
+"""
+import sys
+
+from benchmarks import (fig2_speedup, fig4_fraction, kernel_micro, roofline,
+                        selection_overhead, table2_accuracy, table3_gradmatch,
+                        table5_tau, table6_ablation)
+
+SECTIONS = {
+    "table2": table2_accuracy.main,
+    "table3": table3_gradmatch.main,
+    "table5": table5_tau.main,
+    "table6": table6_ablation.main,
+    "fig2": fig2_speedup.main,
+    "fig4": fig4_fraction.main,
+    "selection": selection_overhead.main,
+    "kernels": kernel_micro.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    only = sys.argv[1:] or list(SECTIONS)
+    print("name,us_per_call,derived")
+    for name in only:
+        SECTIONS[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Table 1 complexity row: selection cost — paper-faithful O(N log N) sort vs
+the beyond-paper O(N) histogram threshold (+ its Pallas kernel)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import init_sample_state, scatter_observations, select_hidden
+from benchmarks.common import csv_row
+
+
+def _bench(fn, *args, iters=5):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> None:
+    for n in (100_000, 1_000_000):
+        r = np.random.default_rng(0)
+        s = init_sample_state(n)
+        s = scatter_observations(
+            s, jnp.arange(n), jnp.asarray(r.exponential(1, n), jnp.float32),
+            jnp.ones(n, bool), jnp.full(n, 0.9, jnp.float32), 0)
+        t_sort = _bench(lambda st: select_hidden(st, 0.3, method="sort"), s)
+        t_hist = _bench(lambda st: select_hidden(st, 0.3, method="histogram"), s)
+        print(csv_row(f"selection/sort_N{n}", t_sort, "method=argsort;O(NlogN)"))
+        print(csv_row(f"selection/hist_N{n}", t_hist,
+                      f"method=histogram;O(N);speedup={t_sort / t_hist:.2f}x"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Paper Table 2: max test accuracy of Baseline / ISWR / FORGET / SB /
+KAKURENBO (+ random hiding, App. C.4). Reports per-epoch time and the
+accuracy delta vs Baseline."""
+from benchmarks.common import EPOCHS, csv_row, run_strategy
+
+
+def main() -> None:
+    rows = []
+    base = run_strategy("baseline")
+    rows.append(("table2/baseline", base, 0.0))
+    for strat in ("iswr", "forget", "sb", "kakurenbo", "random",
+                  "infobatch"):
+        res = run_strategy(strat)
+        rows.append((f"table2/{strat}", res, res["best_acc"] - base["best_acc"]))
+    for name, res, diff in rows:
+        us_per_epoch = res["wall_s"] / EPOCHS * 1e6
+        print(csv_row(name, us_per_epoch,
+                      f"best_acc={res['best_acc']:.4f};diff={diff:+.4f};"
+                      f"bwd_samples={res['bwd']}"))
+
+
+if __name__ == "__main__":
+    main()

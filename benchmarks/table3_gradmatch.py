@@ -1,0 +1,17 @@
+"""Paper Table 3: Grad-Match vs KAKURENBO, single-worker setting."""
+from benchmarks.common import EPOCHS, csv_row, run_strategy
+
+
+def main() -> None:
+    base = run_strategy("baseline")
+    gm = run_strategy("gradmatch")
+    kk = run_strategy("kakurenbo")
+    for name, res in (("table3/baseline", base), ("table3/gradmatch-0.3", gm),
+                      ("table3/kakurenbo-0.3", kk)):
+        print(csv_row(name, res["wall_s"] / EPOCHS * 1e6,
+                      f"best_acc={res['best_acc']:.4f};"
+                      f"time_vs_base={res['wall_s'] / base['wall_s']:.3f}"))
+
+
+if __name__ == "__main__":
+    main()

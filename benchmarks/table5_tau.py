@@ -1,0 +1,19 @@
+"""Paper Table 5: impact of the prediction-confidence threshold tau."""
+from repro.core import KakurenboConfig
+
+from benchmarks.common import EPOCHS, csv_row, run_strategy
+
+
+def main() -> None:
+    for tau in (0.5, 0.7, 0.9):
+        kc = KakurenboConfig(max_fraction=0.3, tau=tau,
+                             fraction_milestones=(0, 4, 6, 9))
+        res = run_strategy("kakurenbo", kakurenbo=kc)
+        mean_hidden = sum(h.hidden_fraction for h in res["history"]) / EPOCHS
+        print(csv_row(f"table5/tau={tau}", res["wall_s"] / EPOCHS * 1e6,
+                      f"best_acc={res['best_acc']:.4f};"
+                      f"mean_hidden={mean_hidden:.3f}"))
+
+
+if __name__ == "__main__":
+    main()

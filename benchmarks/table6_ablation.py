@@ -1,0 +1,26 @@
+"""Paper Table 6: component ablation — HE / MB / RF / LR (v1000..v1111)."""
+from repro.core import KakurenboConfig
+
+from benchmarks.common import EPOCHS, csv_row, run_strategy
+
+
+def main() -> None:
+    base = run_strategy("baseline")
+    print(csv_row("table6/baseline", base["wall_s"] / EPOCHS * 1e6,
+                  f"best_acc={base['best_acc']:.4f}"))
+    for mb in (False, True):
+        for rf in (False, True):
+            for lr in (False, True):
+                tag = f"v1{int(mb)}{int(rf)}{int(lr)}"
+                kc = KakurenboConfig(
+                    max_fraction=0.4, moveback=mb, reduce_fraction=rf,
+                    adjust_lr=lr, fraction_milestones=(0, 4, 6, 9))
+                res = run_strategy("kakurenbo", kakurenbo=kc)
+                print(csv_row(
+                    f"table6/{tag}", res["wall_s"] / EPOCHS * 1e6,
+                    f"best_acc={res['best_acc']:.4f};"
+                    f"diff={res['best_acc'] - base['best_acc']:+.4f}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper reproduction driver: Tables 2/5/6 + Figs 2/4 in one run.
+
+    PYTHONPATH=src python examples/paper_reproduction.py [--quick]
+
+Delegates to the benchmark modules (one per paper table/figure) and writes
+results/paper_reproduction.csv.
+"""
+import argparse
+import contextlib
+import io
+import os
+
+from benchmarks import (fig2_speedup, fig4_fraction, selection_overhead,
+                        table2_accuracy, table3_gradmatch, table5_tau,
+                        table6_ablation)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="only Table 2 + Fig. 4 (fast)")
+    p.add_argument("--out", default="results/paper_reproduction.csv")
+    args = p.parse_args()
+    sections = ([table2_accuracy, fig4_fraction] if args.quick else
+                [table2_accuracy, table3_gradmatch, table5_tau,
+                 table6_ablation, fig2_speedup, fig4_fraction,
+                 selection_overhead])
+    buf = io.StringIO()
+    print("name,us_per_call,derived")
+    buf.write("name,us_per_call,derived\n")
+    for mod in sections:
+        out = io.StringIO()
+        with contextlib.redirect_stdout(out):
+            mod.main()
+        text = out.getvalue()
+        print(text, end="")
+        buf.write(text)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(buf.getvalue())
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Batched serving example: prefill + decode on any registry arch.
+
+    PYTHONPATH=src python examples/serve_demo.py --arch mamba2-130m
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

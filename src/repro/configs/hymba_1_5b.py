@@ -1,0 +1,16 @@
+"""hymba-1.5b — hybrid parallel attn+mamba heads, SWA [arXiv:2411.13676; hf].
+
+25 attention heads (64-dim) in parallel with 25 SSM heads (d_inner=1600,
+ssm_state=16); sliding-window attention (1024) with 3 global layers
+(first/middle/last). Long-context decode runs all-SWA with a ring cache.
+"""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b", family="hybrid",
+    num_layers=32, d_model=1600, num_heads=25, num_kv_heads=5,
+    d_ff=5504, vocab_size=32001, head_dim=64,
+    ssm=SSMConfig(state_dim=16, head_dim=64, conv_width=4, chunk=128,
+                  d_inner=1600),
+    attn_window=1024, rope_theta=1e4, source="arXiv:2411.13676; hf",
+)

@@ -1,0 +1,15 @@
+"""kimi-k2-1t-a32b — trillion-param MoE, 384 experts top-8 [arXiv:2501.kimi2; unverified].
+
+Uses Adafactor (factored second moment): full Adam state for 1T params would
+exceed the 16 GB/chip HBM budget at 512 chips (DESIGN.md Sec. 5).
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    num_layers=61, d_model=7168, num_heads=64, num_kv_heads=8,
+    d_ff=2048, vocab_size=163840, head_dim=112,
+    moe=MoEConfig(num_experts=384, top_k=8, d_ff_expert=2048),
+    rope_theta=1e6, source="arXiv:2501.kimi2; unverified",
+    optimizer="adafactor",
+)

@@ -1,0 +1,15 @@
+"""llava-next-mistral-7b — VLM, anyres tiling [hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified].
+
+Vision frontend is a stub: input_specs() provides 576 precomputed 1024-dim
+patch embeddings per sample (CLIP-ViT-L/14 @ 336px grid); the mm projector
+and the mistral-7b text backbone are real.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b", family="vlm",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=14336, vocab_size=32000, head_dim=128,
+    num_patch_tokens=576, rope_theta=1e6,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified",
+)

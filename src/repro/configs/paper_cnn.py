@@ -1,0 +1,6 @@
+"""The paper's own model family: small conv classifier (WideResNet-flavored)
+for the KAKURENBO reproduction benchmarks on synthetic classification."""
+from repro.models.cnn import CNNConfig
+
+CONFIG = CNNConfig(name="paper-cifar-cnn", image_size=16, widths=(32, 64),
+                   num_classes=10, hidden=128)

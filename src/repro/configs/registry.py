@@ -1,0 +1,28 @@
+"""--arch <id> registry over all assigned architectures (+ paper's own)."""
+from repro.configs import (
+    qwen3_1_7b, smollm_135m, internlm2_20b, mistral_large_123b,
+    seamless_m4t_large_v2, phi35_moe_42b, kimi_k2_1t, mamba2_130m,
+    llava_next_mistral_7b, hymba_1_5b,
+)
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, shape_applicable
+
+ARCHS: dict[str, ArchConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (qwen3_1_7b, smollm_135m, internlm2_20b, mistral_large_123b,
+              seamless_m4t_large_v2, phi35_moe_42b, kimi_k2_1t, mamba2_130m,
+              llava_next_mistral_7b, hymba_1_5b)
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def all_cells():
+    """Every (arch, shape) pair with its applicability verdict."""
+    for aname, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            ok, reason = shape_applicable(cfg, shape)
+            yield cfg, shape, ok, reason

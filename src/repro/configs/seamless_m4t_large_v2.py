@@ -1,0 +1,14 @@
+"""seamless-m4t-large-v2 — enc-dec audio/text [arXiv:2308.11596; hf].
+
+Modality frontend is a stub: input_specs() provides precomputed 1024-dim
+frame embeddings (w2v-BERT-style); encoder/decoder backbones are real.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-large-v2", family="encdec",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=16,
+    d_ff=8192, vocab_size=256206, head_dim=64,
+    num_encoder_layers=24, encoder_input_dim=1024,
+    rope_theta=1e4, source="arXiv:2308.11596; hf",
+)

@@ -1,0 +1,19 @@
+"""KAKURENBO core: adaptive sample hiding + the paper's baselines."""
+from repro.core.state import (  # noqa: F401
+    SampleState, init_sample_state, scatter_observations, with_hidden,
+)
+from repro.core.selection import (  # noqa: F401
+    select_hidden, select_hidden_sort, select_hidden_histogram,
+    histogram_threshold, HIST_BINS,
+)
+from repro.core.schedule import (  # noqa: F401
+    FractionSchedule, LRSchedule, kakurenbo_lr, linear_scaling_rule,
+)
+from repro.core.kakurenbo import (  # noqa: F401
+    KakurenboConfig, KakurenboSampler, EpochPlan,
+)
+from repro.core.iswr import ISWRConfig, ISWRSampler  # noqa: F401
+from repro.core.forget import ForgetConfig, ForgetSampler  # noqa: F401
+from repro.core.selective_backprop import SBConfig, SelectiveBackprop  # noqa: F401
+from repro.core.gradmatch import GradMatchConfig, GradMatchSampler  # noqa: F401
+from repro.core.infobatch import InfoBatchConfig, InfoBatchSampler  # noqa: F401

@@ -1,0 +1,71 @@
+"""Online FORGET baseline (paper Sec. 4; Toneva et al. [13]).
+
+Train ``warmup_epochs`` (paper: 20) on the full dataset while counting
+*forgetting events* (correct -> incorrect transitions, maintained for free in
+SampleState).  Then prune the fraction F of the *least-forgettable* samples
+(fewest forgetting events, ties broken by never-misclassified first) and
+restart training from epoch 0 on the pruned set.  Total reported cost must
+include the warmup epochs (paper Sec. 4.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.state import SampleState, init_sample_state, scatter_observations
+
+
+@dataclasses.dataclass
+class ForgetConfig:
+    fraction: float = 0.3
+    warmup_epochs: int = 20
+
+
+class ForgetSampler:
+    def __init__(self, num_samples: int, config: ForgetConfig | None = None,
+                 seed: int = 0):
+        self.config = config or ForgetConfig()
+        self.state: SampleState = init_sample_state(num_samples)
+        self._rng = np.random.default_rng(seed)
+        self._observe = jax.jit(scatter_observations)
+        self.pruned_mask = np.zeros(num_samples, bool)  # True = removed
+        self.restarted = False
+
+    @property
+    def should_restart(self) -> bool:
+        """True exactly once, after warmup finishes: caller re-inits the model."""
+        return self.restarted
+
+    def begin_epoch(self, epoch: int) -> np.ndarray:
+        """Visible shuffled indices. ``epoch`` counts total epochs elapsed."""
+        if epoch == self.config.warmup_epochs and not self.restarted:
+            self._prune()
+            self.restarted = True
+        else:
+            self.restarted = False
+        idx = np.arange(self.state.num_samples)[~self.pruned_mask]
+        self._rng.shuffle(idx)
+        return idx
+
+    def _prune(self) -> None:
+        events = np.asarray(self.state.forget_events).astype(np.float64)
+        # Samples that were never correctly predicted count as "infinitely
+        # forgettable" (Toneva et al. keep them): give them +inf events.
+        ever_correct = np.asarray(self.state.pa) | (np.asarray(self.state.forget_events) > 0)
+        events = np.where(ever_correct, events, np.inf)
+        n = self.state.num_samples
+        k = int(np.floor(self.config.fraction * n))
+        order = np.argsort(events, kind="stable")  # fewest events first
+        self.pruned_mask[order[:k]] = True
+
+    def observe(self, indices, loss, pa, pc, epoch: int) -> None:
+        self.state = self._observe(self.state, jnp.asarray(indices), loss, pa,
+                                   pc, epoch)
+
+    def batches(self, epoch_indices: np.ndarray, batch_size: int) -> Iterator[np.ndarray]:
+        for start in range(0, len(epoch_indices) - batch_size + 1, batch_size):
+            yield epoch_indices[start : start + batch_size]

@@ -1,0 +1,96 @@
+"""Grad-Match baseline [18] (paper Sec. 4, single-GPU comparison only).
+
+Every R epochs, select a per-class subset whose weighted last-layer gradient
+sum matches the full-dataset last-layer gradient, via orthogonal matching
+pursuit (OMP).  Following the paper's approximations: last-layer gradients
+only, per-class decomposition, subset + weights frozen for the next R epochs.
+
+The paper itself concludes Grad-Match is impractical for distributed training
+(the per-class gather is a huge collective); we therefore implement it as a
+single-host method for the classification configs — exactly the setting of
+the paper's Table 3 — and do not wire it into the pjit path.  This is a
+deliberate scope decision mirroring the paper (DESIGN.md Sec. 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class GradMatchConfig:
+    fraction: float = 0.3     # keep 1-fraction of the data
+    interval: int = 5          # R: re-select every R epochs
+    lam: float = 0.5           # OMP ridge regularizer
+
+
+def _omp_select(G: np.ndarray, budget: int, lam: float) -> tuple[np.ndarray, np.ndarray]:
+    """Greedy OMP: pick ``budget`` rows of G whose weighted sum matches G.sum(0).
+
+    G: (n, d) per-sample last-layer gradient features.
+    Returns (indices, weights).
+    """
+    n = G.shape[0]
+    budget = min(budget, n)
+    target = G.sum(axis=0)
+    residual = target.copy()
+    chosen: list[int] = []
+    mask = np.zeros(n, bool)
+    for _ in range(budget):
+        scores = G @ residual
+        scores[mask] = -np.inf
+        j = int(np.argmax(scores))
+        if not np.isfinite(scores[j]):
+            break
+        chosen.append(j)
+        mask[j] = True
+        A = G[chosen]  # (k, d)
+        # ridge least squares for weights: min ||A^T w - target||^2 + lam||w||^2
+        k = len(chosen)
+        w = np.linalg.solve(A @ A.T + lam * np.eye(k), A @ target)
+        residual = target - A.T @ w
+    return np.array(chosen, np.int64), np.maximum(np.array(w if chosen else []), 0.0)
+
+
+class GradMatchSampler:
+    def __init__(self, num_samples: int, num_classes: int,
+                 config: GradMatchConfig | None = None, seed: int = 0):
+        self.config = config or GradMatchConfig()
+        self.n = num_samples
+        self.num_classes = num_classes
+        self._rng = np.random.default_rng(seed)
+        self.subset = np.arange(num_samples)
+        self.weights = np.ones(num_samples, np.float32)
+
+    def maybe_reselect(self, epoch: int, grad_feats: np.ndarray,
+                       labels: np.ndarray) -> bool:
+        """grad_feats: (N, d) last-layer grad proxies (e.g. p - onehot(y))."""
+        if epoch % self.config.interval != 0:
+            return False
+        keep_frac = 1.0 - self.config.fraction
+        idx_all, w_all = [], []
+        for c in range(self.num_classes):
+            cls = np.nonzero(labels == c)[0]
+            if len(cls) == 0:
+                continue
+            budget = max(1, int(round(keep_frac * len(cls))))
+            sel, w = _omp_select(grad_feats[cls], budget, self.config.lam)
+            idx_all.append(cls[sel])
+            w_all.append(w)
+        self.subset = np.concatenate(idx_all)
+        w = np.concatenate(w_all).astype(np.float32)
+        # normalize so mean weight is 1 (keeps the LR meaningful)
+        self.weights = np.ones(self.n, np.float32)
+        self.weights[self.subset] = w * (len(w) / max(w.sum(), 1e-8))
+        return True
+
+    def begin_epoch(self) -> np.ndarray:
+        idx = self.subset.copy()
+        self._rng.shuffle(idx)
+        return idx
+
+    def batches(self, epoch_indices: np.ndarray, batch_size: int) -> Iterator[np.ndarray]:
+        for start in range(0, len(epoch_indices) - batch_size + 1, batch_size):
+            yield epoch_indices[start : start + batch_size]

@@ -1,0 +1,69 @@
+"""InfoBatch baseline [28] (paper App. E / C.4 discussion; Qin et al. 2023).
+
+Lossless dynamic pruning: each epoch, randomly prune a fraction ``r`` of the
+samples whose (lagging) loss is below the running mean, and RESCALE the loss
+of the kept below-mean samples by 1/(1-r) so the expected gradient is
+unbiased — the property KAKURENBO approximates globally with its Eq. 8 LR
+adjustment.  No pruning during the final ``anneal`` fraction of training
+(the paper's InfoBatch recipe).
+
+Included because the paper positions itself against it (App. C.4): having
+both in one framework lets the comparison run under identical substrates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.state import SampleState, init_sample_state, scatter_observations
+
+
+@dataclasses.dataclass
+class InfoBatchConfig:
+    prune_ratio: float = 0.5   # r: fraction of below-mean samples pruned
+    anneal: float = 0.875      # stop pruning after this fraction of epochs
+    total_epochs: int = 100
+
+
+class InfoBatchSampler:
+    def __init__(self, num_samples: int, config: InfoBatchConfig | None = None,
+                 seed: int = 0):
+        self.config = config or InfoBatchConfig()
+        self.state: SampleState = init_sample_state(num_samples, init_loss=1e9)
+        self._rng = np.random.default_rng(seed)
+        self._observe = jax.jit(scatter_observations)
+        self.weights = np.ones(num_samples, np.float32)
+
+    def begin_epoch(self, epoch: int) -> np.ndarray:
+        c = self.config
+        n = self.state.num_samples
+        self.weights = np.ones(n, np.float32)
+        seen = np.asarray(self.state.seen) >= 0
+        annealed = epoch >= int(c.anneal * c.total_epochs)
+        if not seen.any() or annealed:
+            idx = np.arange(n)
+        else:
+            loss = np.asarray(self.state.loss)
+            mean = loss[seen].mean()
+            below = seen & (loss < mean)
+            prune = below & (self._rng.random(n) < c.prune_ratio)
+            # kept below-mean samples are up-weighted: unbiased expectation
+            self.weights[below & ~prune] = 1.0 / (1.0 - c.prune_ratio)
+            idx = np.arange(n)[~prune]
+        self._rng.shuffle(idx)
+        return idx
+
+    def sample_weights(self, indices: np.ndarray) -> np.ndarray:
+        return self.weights[indices]
+
+    def observe(self, indices, loss, pa, pc, epoch: int) -> None:
+        self.state = self._observe(self.state, jnp.asarray(indices), loss, pa,
+                                   pc, epoch)
+
+    def batches(self, epoch_indices: np.ndarray, batch_size: int) -> Iterator[np.ndarray]:
+        for start in range(0, len(epoch_indices) - batch_size + 1, batch_size):
+            yield epoch_indices[start : start + batch_size]

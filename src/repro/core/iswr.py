@@ -1,0 +1,60 @@
+"""Importance Sampling With Replacement (ISWR) baseline [Katharopoulos'18].
+
+Each epoch draws N samples *with replacement* with probability proportional
+to the (lagging) per-sample loss; the model therefore sees the same number of
+samples per epoch as the baseline (paper Sec. 4, "ISWR").  Optional unbiasing
+weights w_i = 1/(N p_i) are available (the paper's plain variant leaves them
+off, matching [11]'s practical recipe with loss-proportional probabilities).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.state import SampleState, init_sample_state, scatter_observations
+
+
+@dataclasses.dataclass
+class ISWRConfig:
+    smoothing: float = 1e-3   # additive smoothing so unseen/zero-loss samples
+                              # keep a nonzero draw probability
+    unbiased: bool = False    # multiply per-sample loss by 1/(N p_i)
+
+
+class ISWRSampler:
+    def __init__(self, num_samples: int, config: ISWRConfig | None = None,
+                 seed: int = 0):
+        self.config = config or ISWRConfig()
+        self.state: SampleState = init_sample_state(num_samples, init_loss=1.0)
+        self._rng = np.random.default_rng(seed)
+        self._observe = jax.jit(scatter_observations)
+
+    def begin_epoch(self, epoch: int) -> np.ndarray:
+        """Return N with-replacement indices for this epoch."""
+        loss = np.asarray(self.state.loss)
+        # Never-seen samples get the mean seen loss (neutral importance).
+        seen = np.asarray(self.state.seen) >= 0
+        fill = loss[seen].mean() if seen.any() else 1.0
+        loss = np.where(seen, loss, fill) + self.config.smoothing
+        p = loss / loss.sum()
+        self._last_p = p
+        n = self.state.num_samples
+        return self._rng.choice(n, size=n, replace=True, p=p)
+
+    def sample_weights(self, indices: np.ndarray) -> np.ndarray:
+        if not self.config.unbiased:
+            return np.ones(len(indices), np.float32)
+        n = self.state.num_samples
+        return (1.0 / (n * self._last_p[indices])).astype(np.float32)
+
+    def observe(self, indices, loss, pa, pc, epoch: int) -> None:
+        self.state = self._observe(self.state, jnp.asarray(indices), loss, pa,
+                                   pc, epoch)
+
+    def batches(self, epoch_indices: np.ndarray, batch_size: int) -> Iterator[np.ndarray]:
+        for start in range(0, len(epoch_indices) - batch_size + 1, batch_size):
+            yield epoch_indices[start : start + batch_size]

@@ -1,0 +1,157 @@
+"""KAKURENBO epoch orchestration (paper Fig. 1).
+
+Per epoch e:
+  B.1/B.2  rank samples by lagging loss, hide lowest-loss fraction <= F_e
+  B.3      move back candidates not (correct & PC >= tau) last epoch
+  C        train on the visible set with uniform w/o-replacement sampling;
+           LR multiplied by 1/(1-F*_e) (Eq. 8); per-sample (loss, PA, PC)
+           recorded from the training forward pass ("lagging loss")
+  D        forward-only refresh of the hidden set at epoch end
+
+This module is model-agnostic: the trainer supplies
+  train_step(batch_indices)  -> (per-sample loss, pa, pc) and
+  eval_forward(batch_indices) -> (loss, pa, pc)
+while this class owns the SampleState and the epoch plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import selection as sel
+from repro.core.schedule import FractionSchedule, kakurenbo_lr
+from repro.core.state import SampleState, init_sample_state, scatter_observations, with_hidden
+
+
+@dataclasses.dataclass
+class KakurenboConfig:
+    max_fraction: float = 0.3
+    fraction_alphas: tuple[float, ...] = (1.0, 0.8, 0.6, 0.4)
+    fraction_milestones: tuple[int, ...] = (0, 30, 60, 80)
+    tau: float = 0.7
+    selection: str = "sort"        # "sort" (paper) | "histogram" (optimized)
+    drop_top_fraction: float = 0.0  # DropTop (App. D)
+    adjust_lr: bool = True          # LR component (Eq. 8)
+    moveback: bool = True           # MB component
+    reduce_fraction: bool = True    # RF component
+    # Component toggles above express Table 6's v1000..v1111 ablations.
+
+
+@dataclasses.dataclass
+class EpochPlan:
+    epoch: int
+    visible_indices: np.ndarray   # shuffled, uniform w/o replacement
+    hidden_indices: np.ndarray
+    max_fraction: float           # F_e (ceiling)
+    hidden_fraction: float        # F*_e (actual, after move-back)
+    lr_scale: float               # 1/(1-F*_e) if adjust_lr else 1.0
+
+
+class KakurenboSampler:
+    """Owns SampleState + epoch planning. Host-side glue; math is jitted."""
+
+    def __init__(self, num_samples: int, config: KakurenboConfig | None = None,
+                 seed: int = 0):
+        self.config = config or KakurenboConfig()
+        self.state: SampleState = init_sample_state(num_samples)
+        self._rng = np.random.default_rng(seed)
+        c = self.config
+        self._fraction_schedule = FractionSchedule(
+            max_fraction=c.max_fraction,
+            alphas=c.fraction_alphas if c.reduce_fraction else (1.0,) * len(c.fraction_alphas),
+            milestones=c.fraction_milestones,
+        )
+        self._observe = jax.jit(scatter_observations)
+
+    # -- epoch boundary ------------------------------------------------------
+
+    def begin_epoch(self, epoch: int) -> EpochPlan:
+        c = self.config
+        f_max = float(self._fraction_schedule(epoch))
+        tau = c.tau if c.moveback else -1.0  # tau<0 disables move-back:
+        # every low-loss candidate stays hidden (PC >= -1 is always true for
+        # seen samples but pa gating remains) — to disable fully we bypass:
+        if c.moveback:
+            hidden = sel.select_hidden(
+                self.state, f_max, method=c.selection, tau=tau,
+                drop_top_fraction=c.drop_top_fraction)
+        else:
+            hidden = _select_no_moveback(self.state, f_max, c.selection,
+                                         c.drop_top_fraction)
+        self.state = with_hidden(self.state, hidden)
+        hidden_np = np.asarray(hidden)
+        all_idx = np.arange(self.state.num_samples)
+        visible = all_idx[~hidden_np]
+        self._rng.shuffle(visible)
+        f_star = float(hidden_np.mean())
+        lr_scale = float(kakurenbo_lr(jnp.float32(1.0), f_star)) if c.adjust_lr else 1.0
+        return EpochPlan(
+            epoch=epoch,
+            visible_indices=visible,
+            hidden_indices=all_idx[hidden_np],
+            max_fraction=f_max,
+            hidden_fraction=f_star,
+            lr_scale=lr_scale,
+        )
+
+    # -- per-batch bookkeeping ----------------------------------------------
+
+    def observe(self, indices: np.ndarray | jax.Array, loss: jax.Array,
+                pa: jax.Array, pc: jax.Array, epoch: int) -> None:
+        """Record lagging loss/PA/PC from a training or refresh batch."""
+        self.state = self._observe(self.state, jnp.asarray(indices), loss, pa,
+                                   pc, epoch)
+
+    # -- epoch end: refresh hidden list (step D) ------------------------------
+
+    def refresh_hidden(
+        self,
+        plan: EpochPlan,
+        eval_forward: Callable[[np.ndarray], tuple[jax.Array, jax.Array, jax.Array]],
+        batch_size: int,
+    ) -> int:
+        """Forward-only pass over the hidden list (paper step D.1).
+
+        Returns the number of refreshed samples (== forward-only extra work).
+        """
+        hidden = plan.hidden_indices
+        for start in range(0, len(hidden), batch_size):
+            idx = hidden[start : start + batch_size]
+            if len(idx) < batch_size:  # pad to keep a single jit signature
+                pad = np.full(batch_size - len(idx), idx[-1] if len(idx) else 0)
+                padded = np.concatenate([idx, pad]) if len(idx) else pad
+                loss, pa, pc = eval_forward(padded)
+                loss, pa, pc = loss[: len(idx)], pa[: len(idx)], pc[: len(idx)]
+                if len(idx) == 0:
+                    continue
+            else:
+                loss, pa, pc = eval_forward(idx)
+            self.observe(idx, loss, pa, pc, plan.epoch)
+        return int(len(hidden))
+
+    def batches(self, plan: EpochPlan, batch_size: int) -> Iterator[np.ndarray]:
+        """Uniform w/o-replacement batches over the visible set (step C).
+
+        Drops the trailing partial batch, like the paper's DDP loaders.
+        """
+        v = plan.visible_indices
+        for start in range(0, len(v) - batch_size + 1, batch_size):
+            yield v[start : start + batch_size]
+
+
+def _select_no_moveback(state: SampleState, f_max: float, method: str,
+                        drop_top: float) -> jax.Array:
+    """HE without MB: hide the lowest-loss candidates unconditionally."""
+    n = state.num_samples
+    num_hide = int(np.floor(f_max * n))
+    order = jnp.argsort(state.loss)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    hidden = (rank < num_hide) & (state.seen >= 0)
+    if drop_top > 0:
+        num_top = int(np.floor(drop_top * n))
+        hidden = hidden | ((rank >= n - num_top) & (state.seen >= 0))
+    return hidden

@@ -1,0 +1,102 @@
+"""Schedules: maximum hidden fraction (Sec. 3.3) and LR adjustment (Sec. 3.2).
+
+Also provides the baseline LR schedules the paper trains with (App. B.3):
+step decay, cosine, constant — all with linear warmup and the linear-scaling
+rule — so that KAKURENBO's Eq. 8 factor can wrap any of them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Maximum hidden fraction schedule (paper Sec. 3.3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FractionSchedule:
+    """F_e = F_max * alpha[i] for the largest milestone[i] <= e.
+
+    Paper defaults: F_max=0.3, alpha=[1, 0.8, 0.6, 0.4] at epochs
+    [0, 30, 60, 80] (ImageNet-1K) / [0, 60, 120, 180] (CIFAR-100).
+    """
+
+    max_fraction: float = 0.3
+    alphas: Sequence[float] = (1.0, 0.8, 0.6, 0.4)
+    milestones: Sequence[int] = (0, 30, 60, 80)
+
+    def __post_init__(self):
+        assert len(self.alphas) == len(self.milestones)
+        assert 0.0 <= self.max_fraction < 1.0
+
+    def __call__(self, epoch: jax.Array | int) -> jax.Array:
+        e = jnp.asarray(epoch, jnp.int32)
+        alpha = jnp.asarray(0.0, jnp.float32)
+        for a, m in zip(self.alphas, self.milestones):
+            alpha = jnp.where(e >= m, jnp.float32(a), alpha)
+        return jnp.float32(self.max_fraction) * alpha
+
+
+# ---------------------------------------------------------------------------
+# Learning-rate schedules (paper App. B.3) + KAKURENBO Eq. 8 adjustment
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LRSchedule:
+    """Base LR schedule eta_base(e) with linear warmup over warmup_epochs.
+
+    kind: "step" (decay_rate at each milestone), "cosine" (anneal to 0 over
+    total_epochs), or "constant".
+    """
+
+    base_lr: float
+    kind: str = "cosine"
+    total_epochs: int = 100
+    warmup_epochs: int = 5
+    decay_rate: float = 0.1
+    milestones: Sequence[int] = (30, 60, 80)
+
+    def __call__(self, epoch: jax.Array | int) -> jax.Array:
+        e = jnp.asarray(epoch, jnp.float32)
+        if self.kind == "step":
+            lr = jnp.float32(self.base_lr)
+            for m in self.milestones:
+                lr = jnp.where(e >= m, lr * self.decay_rate, lr)
+        elif self.kind == "cosine":
+            frac = jnp.clip(
+                (e - self.warmup_epochs)
+                / max(self.total_epochs - self.warmup_epochs, 1),
+                0.0,
+                1.0,
+            )
+            lr = jnp.float32(self.base_lr) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        elif self.kind == "constant":
+            lr = jnp.float32(self.base_lr)
+        else:
+            raise ValueError(f"unknown LR schedule {self.kind!r}")
+        if self.warmup_epochs > 0:
+            warm = jnp.clip((e + 1.0) / self.warmup_epochs, 0.0, 1.0)
+            lr = jnp.where(e < self.warmup_epochs, jnp.float32(self.base_lr) * warm, lr)
+        return lr
+
+
+def kakurenbo_lr(base_lr: jax.Array, hidden_fraction: jax.Array) -> jax.Array:
+    """Eq. 8: eta_e = eta_base,e / (1 - F_e).
+
+    ``hidden_fraction`` is the *actual* hidden fraction F*_e this epoch (after
+    move-back), which is what compensates the reduced number of SGD steps.
+    Applied after warmup; independent of the underlying scheduler.
+    """
+    f = jnp.clip(jnp.asarray(hidden_fraction, jnp.float32), 0.0, 0.95)
+    return base_lr / (1.0 - f)
+
+
+def linear_scaling_rule(base_lr_per_worker: float, num_workers: int) -> float:
+    """Goyal et al. [34] linear-scaling rule used by the paper's ResNet-50 (A)."""
+    return base_lr_per_worker * num_workers

@@ -1,0 +1,173 @@
+"""Hidden-sample selection.
+
+Two interchangeable implementations of step B of the paper (Fig. 1):
+
+1. ``select_hidden_sort`` — the *paper-faithful* method: rank every sample by
+   lagging loss (O(N log N) sort, the complexity the paper itself reports in
+   Table 1) and hide the lowest-loss fraction <= F, then apply the move-back
+   rule (Sec. 3.1).
+
+2. ``select_hidden_histogram`` — the *beyond-paper optimized* method: find the
+   loss value t such that ~F*N samples have loss < t using a fixed-size
+   histogram (one pass over the local shard + a bins-sized psum when run under
+   shard_map), then hide {loss < t}.  O(N) compute, O(bins) communication —
+   removes both the sort and the O(N)-sized all-gather.
+
+Both return a boolean hidden mask and honour the same move-back rule:
+a candidate stays hidden only if it was *correctly predicted with
+confidence >= tau* at its last observation; otherwise it is moved back to the
+training list.  Never-seen samples (seen < 0) are never hidden.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import SampleState
+
+HIST_BINS = 512
+
+
+def _moveback_eligible(state: SampleState, tau: float) -> jax.Array:
+    """True where a sample is allowed to stay hidden (paper Sec. 3.1)."""
+    confident_correct = state.pa & (state.pc >= tau)
+    return confident_correct & (state.seen >= 0)
+
+
+def select_hidden_sort(
+    state: SampleState,
+    max_fraction: jax.Array | float,
+    tau: float = 0.7,
+    drop_top_fraction: float = 0.0,
+) -> jax.Array:
+    """Paper-faithful selection: global sort by lagging loss.
+
+    Args:
+      state: SampleState with up-to-(an-epoch-stale) loss/PA/PC.
+      max_fraction: F_e, the maximum hidden fraction for this epoch.
+      tau: prediction-confidence threshold for move-back.
+      drop_top_fraction: optional DropTop (paper App. D) — additionally hide
+        this fraction of the *highest*-loss samples (noisy/unlearnable).
+
+    Returns:
+      (N,) bool hidden mask. The actual hidden fraction F* <= F because of
+      move-back.
+    """
+    n = state.num_samples
+    max_fraction = jnp.asarray(max_fraction, jnp.float32)
+    num_hide = jnp.floor(max_fraction * n).astype(jnp.int32)
+    # Rank of each sample among the losses (0 = smallest loss).
+    order = jnp.argsort(state.loss)  # O(N log N): the paper's own complexity.
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    candidate = rank < num_hide
+    hidden = candidate & _moveback_eligible(state, tau)
+    if drop_top_fraction > 0.0:
+        num_top = jnp.floor(jnp.asarray(drop_top_fraction) * n).astype(jnp.int32)
+        # DropTop ignores move-back: these are hard/noisy samples, hidden
+        # unconditionally (App. D), but never-seen samples are exempt.
+        top = (rank >= n - num_top) & (state.seen >= 0)
+        hidden = hidden | top
+    return hidden
+
+
+def histogram_threshold(
+    loss: jax.Array,
+    valid: jax.Array,
+    num_hide: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    bins: int = HIST_BINS,
+) -> jax.Array:
+    """Loss threshold t s.t. |{valid & loss < t}| ~ num_hide, via histogram CDF.
+
+    Pure-jnp reference; the Pallas `threshold_select` kernel computes the same
+    local histogram with VMEM tiling. Under shard_map the histogram is psum'd
+    over the data axes before the CDF scan (see kakurenbo.py).
+    """
+    span = jnp.maximum(hi - lo, 1e-12)
+    idx = jnp.clip(((loss - lo) / span * bins).astype(jnp.int32), 0, bins - 1)
+    hist = jnp.zeros((bins,), jnp.int32).at[idx].add(valid.astype(jnp.int32))
+    cdf = jnp.cumsum(hist)
+    # Smallest bin b with cdf[b] >= num_hide; threshold = right edge of b.
+    b = jnp.searchsorted(cdf, num_hide, side="left")
+    b = jnp.clip(b, 0, bins - 1)
+    return lo + (b.astype(jnp.float32) + 1.0) * span / bins
+
+
+def select_hidden_histogram(
+    state: SampleState,
+    max_fraction: jax.Array | float,
+    tau: float = 0.7,
+    bins: int = HIST_BINS,
+    axis_names: tuple[str, ...] = (),
+) -> jax.Array:
+    """Optimized selection: histogram-CDF threshold instead of a sort.
+
+    With ``axis_names`` non-empty this runs inside shard_map over the data
+    axes: local histograms are psum'd so every shard derives the same global
+    threshold from O(bins) communicated scalars.
+
+    Guarantees hidden_count <= ceil(F*N) + (bin collision slack); the
+    threshold is conservative (uses the bin edge at or *below* the exact
+    quantile would be unsafe, so we mask ranks inside the boundary bin).
+    """
+    n_local = state.num_samples
+    max_fraction = jnp.asarray(max_fraction, jnp.float32)
+    valid = state.seen >= 0
+
+    def _psum(x):
+        for ax in axis_names:
+            x = jax.lax.psum(x, ax)
+        return x
+
+    def _pmin(x):
+        for ax in axis_names:
+            x = jax.lax.pmin(x, ax)
+        return x
+
+    def _pmax(x):
+        for ax in axis_names:
+            x = jax.lax.pmax(x, ax)
+        return x
+
+    n_global = _psum(jnp.asarray(n_local, jnp.float32))
+    num_hide = jnp.floor(max_fraction * n_global).astype(jnp.int32)
+    big = jnp.float32(3.4e38)
+    lo = _pmin(jnp.min(jnp.where(valid, state.loss, big)))
+    hi = _pmax(jnp.max(jnp.where(valid, state.loss, -big)))
+    lo = jnp.minimum(lo, hi)  # degenerate all-invalid shards
+
+    span = jnp.maximum(hi - lo, 1e-12)
+    idx = jnp.clip(((state.loss - lo) / span * bins).astype(jnp.int32), 0, bins - 1)
+    hist = jnp.zeros((bins,), jnp.int32).at[idx].add(valid.astype(jnp.int32))
+    hist = _psum(hist)
+    cdf = jnp.cumsum(hist)
+    b = jnp.clip(jnp.searchsorted(cdf, num_hide, side="left"), 0, bins - 1)
+    # Hide everything strictly below bin b; within bin b we would need a rank
+    # tie-break to hit num_hide exactly — hiding the whole boundary bin can
+    # overshoot by at most one bin's population, and undershooting is always
+    # safe (F is a ceiling, Sec. 3.1), so we include bin b only if the CDF up
+    # to b-1 under-fills by more than half of bin b.
+    below = jnp.where(b > 0, cdf[jnp.maximum(b - 1, 0)], 0)
+    include_b = (num_hide - below) * 2 >= hist[b]
+    candidate = jnp.where(include_b, idx <= b, idx < b) & valid
+    return candidate & _moveback_eligible(state, tau)
+
+
+@functools.partial(jax.jit, static_argnames=("method", "tau", "drop_top_fraction"))
+def select_hidden(
+    state: SampleState,
+    max_fraction: jax.Array | float,
+    *,
+    method: str = "sort",
+    tau: float = 0.7,
+    drop_top_fraction: float = 0.0,
+) -> jax.Array:
+    """Jitted single-host entry point (tests/examples)."""
+    if method == "sort":
+        return select_hidden_sort(state, max_fraction, tau, drop_top_fraction)
+    elif method == "histogram":
+        return select_hidden_histogram(state, max_fraction, tau)
+    raise ValueError(f"unknown selection method {method!r}")

@@ -1,0 +1,44 @@
+"""Selective-Backprop baseline [17] (paper Sec. 4, "SB").
+
+Forward the whole batch, then backprop only samples selected with probability
+P(select | loss) = percentile(loss)^beta; beta=1 keeps ~50% on average (the
+paper's setting).  Implemented as a per-batch 0/1 weight vector applied to
+the loss, so the backward pass is *masked* — on real hardware the saved work
+comes from re-batching the selected samples; on the roofline we account for
+the reduced backward FLOPs analytically (benchmarks/fig2_speedup.py).
+
+The loss percentile is estimated against a running history of recent batch
+losses, as in the reference implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SBConfig:
+    beta: float = 1.0
+    history: int = 4096   # sliding window of recent losses for percentiles
+    floor: float = 0.05   # minimum selection probability (avoid starving)
+
+
+class SelectiveBackprop:
+    def __init__(self, config: SBConfig | None = None, seed: int = 0):
+        self.config = config or SBConfig()
+        self._rng = np.random.default_rng(seed)
+        self._hist = np.zeros(0, np.float32)
+
+    def select(self, batch_loss: np.ndarray) -> np.ndarray:
+        """Return f32 0/1 backward mask for this batch and update history."""
+        c = self.config
+        if len(self._hist) < 32:  # bootstrap: train on everything
+            prob = np.ones_like(batch_loss, np.float64)
+        else:
+            # percentile of each loss within the history window
+            pct = np.searchsorted(np.sort(self._hist), batch_loss) / len(self._hist)
+            prob = np.maximum(pct ** c.beta, c.floor)
+        keep = (self._rng.random(len(batch_loss)) < prob).astype(np.float32)
+        self._hist = np.concatenate([self._hist, batch_loss.astype(np.float32)])[-c.history:]
+        return keep

@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticClassification, SyntheticLM  # noqa: F401
+from repro.data.pipeline import Pipeline, worker_slice  # noqa: F401

@@ -1,0 +1,64 @@
+"""Sharded input pipeline.
+
+Maps global sample indices (produced by the samplers in ``repro.core``) to
+device batches.  In a multi-host deployment each process owns a deterministic
+contiguous shard of every epoch's index list — ``worker_slice`` is the single
+source of truth for that mapping, which is what makes elastic rescaling
+bit-exact: resizing from P to P' workers re-runs the same function with the
+same epoch permutation (see train/fault.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator
+
+import numpy as np
+
+
+def worker_slice(indices: np.ndarray, world_size: int, rank: int,
+                 batch_size_per_worker: int) -> np.ndarray:
+    """Deterministic per-worker view of an epoch index list.
+
+    Trims to a multiple of (world_size * batch) then strides by rank so each
+    global batch is the union of worker sub-batches — the same layout a
+    pjit-sharded (global-batch) array has over the data axes.
+    """
+    gb = world_size * batch_size_per_worker
+    usable = (len(indices) // gb) * gb
+    trimmed = indices[:usable].reshape(-1, world_size, batch_size_per_worker)
+    return trimmed[:, rank, :].reshape(-1)
+
+
+@dataclasses.dataclass
+class Pipeline:
+    """Host-side batch assembly with optional double-buffering."""
+
+    get_fn: Callable[[np.ndarray], dict]    # dataset.get
+    batch_size: int
+
+    pad_final: bool = True
+
+    def batches(self, indices: np.ndarray) -> Iterator[tuple[np.ndarray, dict]]:
+        """Full batches; the trailing partial batch is padded by cycling from
+        the (already shuffled) front of the epoch instead of being dropped —
+        dropping it would quantize away up to B-1 samples' worth of SGD steps,
+        which at small N visibly distorts the hidden-fraction accounting."""
+        bs = self.batch_size
+        n_full = len(indices) // bs
+        for start in range(0, n_full * bs, bs):
+            idx = indices[start : start + bs]
+            yield idx, self.get_fn(idx)
+        rem = len(indices) - n_full * bs
+        if rem and self.pad_final and len(indices) >= bs:
+            idx = np.concatenate([indices[n_full * bs:], indices[: bs - rem]])
+            yield idx, self.get_fn(idx)
+
+    def padded_batch(self, indices: np.ndarray) -> tuple[np.ndarray, dict, int]:
+        """Batch from a possibly-short index list (pads by repeating last)."""
+        n = len(indices)
+        if n == 0:
+            raise ValueError("empty batch")
+        if n < self.batch_size:
+            pad = np.full(self.batch_size - n, indices[-1])
+            indices = np.concatenate([indices, pad])
+        return indices, self.get_fn(indices), n

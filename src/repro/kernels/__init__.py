@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles."""
+from repro.kernels import ops  # noqa: F401

@@ -1,0 +1,102 @@
+"""Flash attention Pallas kernel (TPU target, validated in interpret mode).
+
+Grid (B*Hq, S/blk_q, S/blk_k); the K dimension is the innermost (sequential)
+axis so the online-softmax accumulators live in VMEM scratch across K steps.
+GQA is handled in the K/V index maps (``bh // group``) — K/V are never
+repeated in HBM.  Block sizes default to 128 (MXU-aligned).
+
+VMEM working set per step: q(blk_q x D) + k,v(blk_k x D) + acc(blk_q x D f32)
++ scores(blk_q x blk_k f32) ~ 0.5 MB at D=128 — comfortably inside the
+16 MB/core VMEM budget with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, blk_q: int, blk_k: int):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (blk_q, D)
+    k = k_ref[0].astype(jnp.float32)          # (blk_k, D)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        qpos = iq * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = ik * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B,S,Hq,D); k,v: (B,S,Hkv,D). Returns (B,S,Hq,D)."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    blk_q = min(blk_q, s)
+    blk_k = min(blk_k, s)
+    assert s % blk_q == 0 and s % blk_k == 0, (s, blk_q, blk_k)
+
+    # (B*H, S, D) layout: contiguous per (batch, head) row for clean tiling.
+    qr = q.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+
+    grid = (b * hq, s // blk_q, s // blk_k)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=d ** -0.5, causal=causal,
+                          blk_q=blk_q, blk_k=blk_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+            # GQA: q head bh maps to kv head (bh %% hq) // g of batch bh // hq
+            pl.BlockSpec((1, blk_k, d),
+                         lambda bh, iq, ik: ((bh // hq) * hkv + (bh % hq) // g,
+                                             ik, 0)),
+            pl.BlockSpec((1, blk_k, d),
+                         lambda bh, iq, ik: ((bh // hq) * hkv + (bh % hq) // g,
+                                             ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, d), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,94 @@
+"""Fused CE + prediction-accuracy + prediction-confidence Pallas kernel.
+
+KAKURENBO needs (loss, PA, PC) per sample every step (paper Sec. 3.4 — the
+"lagging loss" is harvested from the training forward pass).  Done naively on
+LM logits this is three separate passes over a (tokens x 152K-vocab) tensor;
+this kernel computes all three in ONE streaming pass with an online-softmax
+recurrence over vocab tiles: the paper's bookkeeping becomes bandwidth-free
+relative to the loss computation it was already doing.
+
+Grid (T/blk_t, V/blk_v), vocab sequential; scratch carries running max m,
+running sum-of-exp l (rescaled on max updates) and the gold-label logit.
+Outputs per token: ce = lse - gold, correct = (gold == max), pmax = 1/l_final
+(since pmax = exp(m - lse) = 1/sum exp(x - m)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(x_ref, lab_ref, ce_ref, cor_ref, pmax_ref, m_ref, l_ref, g_ref,
+            *, blk_v: int):
+    iv = pl.program_id(1)
+
+    @pl.when(iv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        g_ref[...] = jnp.full_like(g_ref, NEG_INF)
+
+    x = x_ref[...].astype(jnp.float32)          # (blk_t, blk_v)
+    lab = lab_ref[...]                          # (blk_t,)
+    v0 = iv * blk_v
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(x, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    l_new = (l_prev * jnp.exp(m_prev - m_new)
+             + jnp.sum(jnp.exp(x - m_new[:, None]), axis=-1))
+    cols = v0 + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    gold_blk = jnp.max(jnp.where(cols == lab[:, None], x, NEG_INF), axis=-1)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    g_ref[...] = jnp.maximum(g_ref[...], gold_blk)
+
+    @pl.when(iv == pl.num_programs(1) - 1)
+    def _final():
+        m, l, g = m_ref[...], l_ref[...], g_ref[...]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        ce_ref[...] = lse - g
+        cor_ref[...] = (g >= m).astype(jnp.int32)
+        pmax_ref[...] = 1.0 / jnp.maximum(l, 1e-30)
+
+
+def loss_confidence_kernel(logits: jax.Array, labels: jax.Array,
+                           blk_t: int = 256, blk_v: int = 2048,
+                           interpret: bool = True):
+    """logits: (T, V); labels: (T,). Returns (ce, correct_i32, pmax) f32/(T,)."""
+    t, v = logits.shape
+    blk_t = min(blk_t, t)
+    blk_v = min(blk_v, v)
+    assert t % blk_t == 0 and v % blk_v == 0, (t, v, blk_t, blk_v)
+    grid = (t // blk_t, v // blk_v)
+    ce, cor, pmax = pl.pallas_call(
+        functools.partial(_kernel, blk_v=blk_v),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_t, blk_v), lambda it, iv: (it, iv)),
+            pl.BlockSpec((blk_t,), lambda it, iv: (it,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk_t,), lambda it, iv: (it,)),
+            pl.BlockSpec((blk_t,), lambda it, iv: (it,)),
+            pl.BlockSpec((blk_t,), lambda it, iv: (it,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((blk_t,), jnp.float32),
+            pltpu.VMEM((blk_t,), jnp.float32),
+            pltpu.VMEM((blk_t,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits, labels)
+    return ce, cor, pmax

@@ -1,0 +1,95 @@
+"""Jit'd public wrappers over the Pallas kernels (padding, layout, dispatch).
+
+``interpret`` defaults to True because this container is CPU-only; on a real
+TPU deployment set ``repro.kernels.ops.INTERPRET = False`` (or pass
+explicitly) and the same code lowers through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import loss_confidence as _lc
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import threshold_select as _ts
+
+INTERPRET = True
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "blk_q", "blk_k"))
+def flash_attention(q, k, v, causal: bool = True, blk_q: int = 128,
+                    blk_k: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, blk_q=blk_q,
+                               blk_k=blk_k, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, a_log, b, c, d_skip, chunk: int = 128):
+    """Same signature as models.ssm.ssd_scan_ref (the oracle).
+
+    x: (B,S,NH,P); dt: (B,S,NH) raw (pre-softplus); b,c: (B,S,N).
+    """
+    B, S, NH, P = x.shape
+    n = b.shape[-1]
+    s_orig = S
+    if S % chunk:
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        S += pad
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dtp = jax.nn.softplus(dt.astype(jnp.float32))            # (B,S,NH)
+    dta = dtp * a[None, None, :]
+    # (B*NH, ...) layout, b/c broadcast across heads
+    xr = x.transpose(0, 2, 1, 3).reshape(B * NH, S, P)
+    dtr = dtp.transpose(0, 2, 1).reshape(B * NH, S)
+    dtar = dta.transpose(0, 2, 1).reshape(B * NH, S)
+    br = jnp.broadcast_to(b[:, None], (B, NH, S, n)).reshape(B * NH, S, n)
+    cr = jnp.broadcast_to(c[:, None], (B, NH, S, n)).reshape(B * NH, S, n)
+    y, state = _ssd.ssd_scan_kernel(xr, dtr, dtar, br, cr, chunk=chunk,
+                                    interpret=INTERPRET)
+    y = y.reshape(B, NH, S, P).transpose(0, 2, 1, 3)[:, :s_orig]
+    y = y + d_skip[None, None, :, None].astype(jnp.float32) * x[:, :s_orig].astype(jnp.float32)
+    state = state.reshape(B, NH, n, P)
+    return y.astype(x.dtype), state
+
+
+@jax.jit
+def loss_confidence(logits, labels):
+    """(..., V) logits + (...) labels -> per-element (ce, correct, pmax)."""
+    shape = labels.shape
+    v = logits.shape[-1]
+    lf = logits.reshape(-1, v)
+    lab = labels.reshape(-1)
+    t = lf.shape[0]
+    blk_t = 256
+    if t % blk_t:
+        pad = blk_t - t % blk_t
+        lf = jnp.pad(lf, ((0, pad), (0, 0)))
+        lab = jnp.pad(lab, (0, pad))
+    blk_v = 2048
+    while v % blk_v:
+        blk_v //= 2
+    ce, cor, pmax = _lc.loss_confidence_kernel(
+        lf, lab, blk_t=min(blk_t, lf.shape[0]), blk_v=max(blk_v, 1),
+        interpret=INTERPRET)
+    return (ce[:t].reshape(shape), cor[:t].reshape(shape).astype(bool),
+            pmax[:t].reshape(shape))
+
+
+@functools.partial(jax.jit, static_argnames=("bins",))
+def loss_histogram(loss, valid, lo, hi, bins: int = 512):
+    n = loss.shape[0]
+    blk = 2048
+    if n % blk:
+        pad = blk - n % blk
+        loss = jnp.pad(loss, (0, pad))
+        valid = jnp.pad(valid, (0, pad))
+    return _ts.histogram_kernel(loss, valid, lo, hi, bins=bins,
+                                blk_n=min(blk, loss.shape[0]),
+                                interpret=INTERPRET)

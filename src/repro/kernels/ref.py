@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_scan_ref  # noqa: F401  (shared oracle)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q: (B,S,Hq,D); k,v: (B,S,Hkv,D) with Hq %% Hkv == 0. f32 softmax."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    q5 = q.reshape(b, s, hkv, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q5, k,
+                        preferred_element_type=jnp.float32) * d ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v).reshape(b, s, hq, d)
+
+
+def loss_confidence_ref(logits: jax.Array, labels: jax.Array):
+    """(T, V) logits, (T,) labels -> per-token (ce, correct, pmax) in f32.
+
+    The fused KAKURENBO bookkeeping: cross-entropy loss, prediction accuracy
+    and prediction confidence (max softmax prob, paper Eq. 3) in one pass.
+    """
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(lf - m[:, None]), axis=-1))
+    gold = jnp.take_along_axis(lf, labels[:, None], axis=-1)[:, 0]
+    ce = lse - gold
+    correct = jnp.argmax(lf, axis=-1) == labels
+    pmax = jnp.exp(m - lse)
+    return ce, correct, pmax
+
+
+def histogram_ref(loss: jax.Array, valid: jax.Array, lo: jax.Array,
+                  hi: jax.Array, bins: int) -> jax.Array:
+    """(N,) losses -> (bins,) i32 histogram over [lo, hi] (clipped)."""
+    span = jnp.maximum(hi - lo, 1e-12)
+    idx = jnp.clip(((loss - lo) / span * bins).astype(jnp.int32), 0, bins - 1)
+    return jnp.zeros((bins,), jnp.int32).at[idx].add(valid.astype(jnp.int32))

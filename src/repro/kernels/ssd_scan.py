@@ -1,0 +1,100 @@
+"""Mamba2 SSD chunked-scan Pallas kernel.
+
+Grid (B*NH, S/chunk); the chunk axis is sequential so the inter-chunk SSM
+state (N x P, f32) persists in VMEM scratch — the kernel streams chunks of
+x/dt/dta/B/C through VMEM, does the three intra-chunk matmuls on the MXU and
+carries the recurrence without ever spilling the state to HBM (the GPU
+implementation materializes per-chunk states; on TPU the sequential-grid
+scratch pattern removes that HBM round-trip entirely — DESIGN.md Sec. 2).
+
+Inputs are pre-arranged by ops.py:
+  x   (B*NH, S, P)     head inputs
+  dt  (B*NH, S)        softplus'd step sizes (>0)
+  dta (B*NH, S)        dt * a  (negative decay exponents)
+  b,c (B*NH, S, N)     input/output projections (group-broadcast per head)
+Outputs: y (B*NH, S, P), final state (B*NH, N, P) f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, dta_ref, b_ref, c_ref, y_ref, state_out_ref,
+            state_ref, *, chunk: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (chunk, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (chunk,)
+    dta = dta_ref[0].astype(jnp.float32)    # (chunk,)
+    bm = b_ref[0].astype(jnp.float32)       # (chunk, N)
+    cm = c_ref[0].astype(jnp.float32)       # (chunk, N)
+
+    cum = jnp.cumsum(dta)                   # (chunk,)
+    seg = cum[-1]
+
+    # intra-chunk: scores[t,s] = (c_t . b_s) * exp(cum_t - cum_s) * dt_s, t>=s
+    cb = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    # mask the exponent (not the product): t<s entries would overflow exp
+    decay = jnp.exp(jnp.where(tri, cum[:, None] - cum[None, :], -1e30))
+    scores = cb * decay * dt[None, :]
+    y = jnp.dot(scores, x, preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    state = state_ref[...]                  # (N, P)
+    y = y + jnp.dot(cm * jnp.exp(cum)[:, None], state,
+                    preferred_element_type=jnp.float32)
+
+    # state update: state = state*exp(seg) + sum_s exp(seg-cum_s) dt_s b_s x_s^T
+    w = (jnp.exp(seg - cum) * dt)[:, None] * bm      # (chunk, N)
+    state_ref[...] = state * jnp.exp(seg) + jnp.dot(
+        w.T, x, preferred_element_type=jnp.float32)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == pl.num_programs(1) - 1)
+    def _final():
+        state_out_ref[0] = state_ref[...]
+
+
+def ssd_scan_kernel(x: jax.Array, dt: jax.Array, dta: jax.Array,
+                    b: jax.Array, c: jax.Array, chunk: int = 128,
+                    interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """x: (BH, S, P); dt/dta: (BH, S); b/c: (BH, S, N)."""
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    grid = (bh, s // chunk)
+    y, state = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, n, p), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, dta, b, c)
+    return y, state

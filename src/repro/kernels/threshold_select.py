@@ -1,0 +1,64 @@
+"""Loss-histogram Pallas kernel for O(N) hidden-sample selection.
+
+The paper's selection sorts all N lagging losses (O(N log N), its own listed
+bottleneck in Table 1).  The optimized selection replaces the sort with a
+fixed 512-bin histogram + CDF threshold (core/selection.py); this kernel
+computes the local histogram in one streaming pass: loss tiles land in VMEM,
+are binned via a one-hot iota compare (VPU) and reduced into a persistent
+(bins,) scratch accumulator across the sequential grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(loss_ref, valid_ref, range_ref, hist_ref, acc_ref, *, bins: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lo, hi = range_ref[0], range_ref[1]
+    span = jnp.maximum(hi - lo, 1e-12)
+    x = loss_ref[...].astype(jnp.float32)            # (blk_n,)
+    valid = valid_ref[...] != 0                      # (blk_n,)
+    idx = jnp.clip(((x - lo) / span * bins).astype(jnp.int32), 0, bins - 1)
+    # one-hot accumulate: (blk_n, bins) compare + column sum (VPU-friendly;
+    # no scatter needed, which TPU vector memory dislikes)
+    onehot = (idx[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (x.shape[0], bins), 1))
+    onehot = jnp.where(valid[:, None], onehot, False)
+    acc_ref[...] += jnp.sum(onehot.astype(jnp.int32), axis=0)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _final():
+        hist_ref[...] = acc_ref[...]
+
+
+def histogram_kernel(loss: jax.Array, valid: jax.Array, lo: jax.Array,
+                     hi: jax.Array, bins: int = 512, blk_n: int = 2048,
+                     interpret: bool = True) -> jax.Array:
+    """loss: (N,) f32; valid: (N,) bool/int. Returns (bins,) i32 histogram."""
+    n = loss.shape[0]
+    blk_n = min(blk_n, n)
+    assert n % blk_n == 0, (n, blk_n)
+    rng = jnp.stack([jnp.asarray(lo, jnp.float32), jnp.asarray(hi, jnp.float32)])
+    return pl.pallas_call(
+        functools.partial(_kernel, bins=bins),
+        grid=(n // blk_n,),
+        in_specs=[
+            pl.BlockSpec((blk_n,), lambda i: (i,)),
+            pl.BlockSpec((blk_n,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((bins,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bins,), jnp.int32)],
+        interpret=interpret,
+    )(loss, valid.astype(jnp.int32), rng)

@@ -1,0 +1,342 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (SPMD partitioning succeeds),
+  * the step fits (memory_analysis),
+  * and extracts FLOPs / bytes / collective volume for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+
+Results are one JSON per cell (resumable: existing files are skipped).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, shape_applicable, tokens_per_step
+from repro.configs.registry import ARCHS, get_arch
+from repro.launch import hlo_analysis
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch.roofline_model import analytic_hbm_bytes
+from repro.launch.train import (abstract_train_state, build_ctx,
+                                make_train_step, optimizer_for, shardings_for)
+from repro.models.common import scan_unroll
+from repro.models.model import Model
+
+
+def _analyze(lowered, compiled, chips, model_flops, cfg=None, shape=None):
+    # cost_analysis runs on the per-device module post-SPMD: flops/bytes are
+    # PER DEVICE (verified empirically; see EXPERIMENTS.md §Dry-run).
+    cost = compiled.cost_analysis() or {}
+    flops_pd = float(cost.get("flops", 0.0))
+    hbm_xla_pd = float(cost.get("bytes accessed", 0.0))
+    flops = flops_pd * chips
+    # XLA-CPU "bytes accessed" is pre-fusion and >10x pessimistic for TPU;
+    # the memory term uses the analytic HBM model (roofline_model.py).
+    if cfg is not None and shape is not None:
+        hbm = analytic_hbm_bytes(cfg, shape, cfg.optimizer)["total"]
+    else:
+        hbm = hbm_xla_pd * chips
+    coll = hlo_analysis.collective_bytes(compiled.as_text())
+    coll_total = sum(v for k, v in coll.items() if k != "count")
+    roof = hlo_analysis.Roofline(
+        flops=flops, hbm_bytes=hbm, coll_bytes=coll_total, chips=chips,
+        peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, ici_bw=ICI_BW)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+    except Exception as e:  # noqa: BLE001 — backend-dependent
+        mem["error"] = str(e)
+    return {
+        "hlo_flops": flops,
+        "hlo_bytes": hbm,
+        "hlo_bytes_xla": hbm_xla_pd * chips,
+        "collective_bytes": coll,
+        "collective_bytes_total": coll_total,
+        "memory": mem,
+        "model_flops": model_flops,
+        "useful_flops_ratio": model_flops / flops if flops else None,
+        "roofline": roof.as_dict(),
+    }
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
+             seq_parallel_kv: bool = False, fsdp: bool | None = None,
+             remat: bool = True, dtype=jnp.bfloat16,
+             unroll: bool = True, dp_only: bool = False,
+             remat_policy: str = "nothing",
+             moe_fsdp_mode: str = "gather") -> dict:
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "seq_parallel_kv": seq_parallel_kv,
+           "unrolled": unroll, "dp_only": dp_only,
+           "remat_policy": remat_policy, "moe_fsdp_mode": moe_fsdp_mode}
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skip", reason=reason)
+        return rec
+    t0 = time.perf_counter()
+    # Fully unroll the layer loop so cost_analysis counts every layer
+    # (XLA counts a while body once); see models/common.py scan_unroll.
+    unroll_n = max(cfg.num_layers, cfg.num_encoder_layers) if unroll else 1
+    with scan_unroll(unroll_n):
+        rec = _run_cell_inner(rec, cfg, shape, multi_pod, seq_parallel_kv,
+                              fsdp, remat, dtype, t0, dp_only, moe_fsdp_mode,
+                              remat_policy)
+    return rec
+
+
+def _scale_layers(cfg, n: int):
+    """Same-family config with n layers (for per-layer cost extraction)."""
+    import dataclasses
+    return dataclasses.replace(
+        cfg, num_layers=n,
+        num_encoder_layers=n if cfg.num_encoder_layers else 0)
+
+
+def run_cell_extrapolated(arch_name: str, shape_name: str, **kw) -> dict:
+    """Roofline via exact linear extrapolation in layer count.
+
+    cost_analysis(L) = outside + L * per_layer for every linear metric
+    (flops, bytes, collective payloads).  Compiling fully-unrolled L=2 and
+    L=4 variants solves for both terms; the true-L totals follow without the
+    (hours-long on 1 CPU core) full-depth unrolled compile.  Validated
+    against exact full unrolls for the small archs (EXPERIMENTS.md §Dry-run).
+    """
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    base = {"arch": arch_name, "shape": shape_name,
+            "mesh": "pod2x16x16" if kw.get("multi_pod") else "pod16x16",
+            "kind": shape.kind, "method": "extrapolate_L2_L4"}
+    if not ok:
+        base.update(status="skip", reason=reason)
+        return base
+    import repro.configs.registry as reg
+    recs = {}
+    for n in (2, 4):
+        small = _scale_layers(cfg, n)
+        key = f"__extrap_{arch_name}_{n}"
+        reg.ARCHS[key] = small
+        try:
+            recs[n] = run_cell(key, shape_name, unroll=True, **kw)
+        finally:
+            del reg.ARCHS[key]
+        if recs[n]["status"] != "ok":
+            base.update(status="error",
+                        error=f"L={n} probe failed: {recs[n].get('error')}")
+            return base
+    L = cfg.num_layers
+
+    def extrap(get):
+        m2, m4 = get(recs[2]), get(recs[4])
+        per_layer = (m4 - m2) / 2.0
+        outside = m2 - 2.0 * per_layer
+        return max(outside + L * per_layer, 0.0)
+
+    rec = dict(base)
+    rec["hlo_flops"] = extrap(lambda r: r["hlo_flops"])
+    rec["hlo_bytes"] = analytic_hbm_bytes(cfg, shape, cfg.optimizer)["total"]
+    rec["hlo_bytes_xla_extrap"] = extrap(lambda r: r["hlo_bytes_xla"])
+    rec["hbm_terms"] = analytic_hbm_bytes(cfg, shape, cfg.optimizer)
+    coll = {}
+    for kind in recs[2]["collective_bytes"]:
+        coll[kind] = extrap(lambda r, k=kind: float(r["collective_bytes"][k]))
+    rec["collective_bytes"] = coll
+    rec["collective_bytes_total"] = sum(
+        v for k, v in coll.items() if k != "count")
+    chips = 512 if kw.get("multi_pod") else 256
+    model_flops = ((6 if shape.kind == "train" else 2)
+                   * cfg.active_param_count() * tokens_per_step(shape))
+    roof = hlo_analysis.Roofline(
+        flops=rec["hlo_flops"], hbm_bytes=rec["hlo_bytes"],
+        coll_bytes=rec["collective_bytes_total"], chips=chips,
+        peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, ici_bw=ICI_BW)
+    rec["model_flops"] = model_flops
+    rec["useful_flops_ratio"] = (model_flops / rec["hlo_flops"]
+                                 if rec["hlo_flops"] else None)
+    rec["roofline"] = roof.as_dict()
+    rec["memory"] = recs[4].get("memory", {})
+    rec["probe_compile_s"] = [recs[2].get("compile_s"), recs[4].get("compile_s")]
+    rec["status"] = "ok"
+    return rec
+
+
+def _run_cell_inner(rec, cfg, shape, multi_pod, seq_parallel_kv, fsdp, remat,
+                    dtype, t0, dp_only=False, moe_fsdp_mode="gather",
+                    remat_policy="nothing"):
+    arch_name = cfg.name
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.size
+        ctx = build_ctx(cfg, mesh, fsdp=fsdp, seq_parallel_kv=seq_parallel_kv,
+                        remat=remat, dp_only=dp_only,
+                        remat_policy=remat_policy,
+                        moe_fsdp_mode=moe_fsdp_mode)
+        rec["fsdp"] = ctx.fsdp
+        model = Model(cfg, ctx)
+        in_specs = model.input_shardings(shape, dtype)
+        in_shardings = shardings_for(mesh, in_specs)
+        inputs = model.input_specs(shape, dtype)
+
+        if shape.kind == "train":
+            opt = optimizer_for(cfg)
+            params_abs, opt_abs, pspecs, ospecs = abstract_train_state(
+                model, opt, dtype)
+            step = make_train_step(model, opt)
+            dp = ctx.dp_axes
+            metr = NamedSharding(mesh, P(dp))
+            scalar = NamedSharding(mesh, P())
+            jitted = jax.jit(
+                step,
+                in_shardings=(shardings_for(mesh, pspecs),
+                              shardings_for(mesh, ospecs),
+                              in_shardings, scalar),
+                out_shardings=(shardings_for(mesh, pspecs),
+                               shardings_for(mesh, ospecs),
+                               scalar, (metr, metr, metr)),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, inputs,
+                                   jax.ShapeDtypeStruct((), jnp.float32))
+            model_flops = 6 * cfg.active_param_count() * tokens_per_step(shape)
+        elif shape.kind == "prefill":
+            params_abs = model.abstract_params(dtype)
+            pspecs = model.param_specs(dtype)
+
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch)
+
+            jitted = jax.jit(
+                prefill_fn,
+                in_shardings=(shardings_for(mesh, pspecs), in_shardings))
+            lowered = jitted.lower(params_abs, inputs)
+            model_flops = 2 * cfg.active_param_count() * tokens_per_step(shape)
+        else:  # decode
+            params_abs = model.abstract_params(dtype)
+            pspecs = model.param_specs(dtype)
+
+            def decode_fn(params, token, cache):
+                return model.decode_step(params, token, cache)
+
+            jitted = jax.jit(
+                decode_fn,
+                in_shardings=(shardings_for(mesh, pspecs),
+                              in_shardings["token"], in_shardings["cache"]),
+                donate_argnums=(2,))
+            lowered = jitted.lower(params_abs, inputs["token"],
+                                   inputs["cache"])
+            model_flops = 2 * cfg.active_param_count() * tokens_per_step(shape)
+
+        rec["lower_s"] = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.perf_counter() - t1
+        rec.update(_analyze(lowered, compiled, chips, model_flops, cfg, shape))
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — any failure here is a finding
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    rec["total_s"] = time.perf_counter() - t0
+    return rec
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--seq-parallel-kv", action="store_true")
+    p.add_argument("--dp-only", action="store_true",
+                   help="map the model axis to data parallelism (ZeRO-3, "
+                        "no TP) — §Perf variant for small archs")
+    p.add_argument("--remat-dots", action="store_true",
+                   help="remat policy: save dot outputs (recompute only "
+                        "elementwise) — §Perf variant for compute-bound train")
+    p.add_argument("--moe-partial", action="store_true",
+                   help="MoE partial-ff mode (no weight gathers) — §Perf "
+                        "variant for MoE decode")
+    p.add_argument("--no-fsdp", action="store_true")
+    p.add_argument("--rolled", action="store_true",
+                   help="keep the layer scan rolled (fast compile; use for "
+                        "the 2-mesh coherence pass — roofline numbers then "
+                        "undercount the layer loop)")
+    p.add_argument("--extrapolate", action="store_true",
+                   help="derive true-L roofline terms from unrolled L=2/L=4 "
+                        "probe compiles (exact linear extrapolation; avoids "
+                        "hours-long full-depth unrolled compiles)")
+    p.add_argument("--out", default="results/dryrun")
+    p.add_argument("--tag", default="")
+    args = p.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    for a, s, mp in cells:
+        tag = f"{args.tag}_" if args.tag else ""
+        name = f"{tag}{a}_{s}_{'mp' if mp else 'sp'}"
+        if args.seq_parallel_kv:
+            name += "_spkv"
+        if args.dp_only:
+            name += "_dponly"
+        if args.remat_dots:
+            name += "_rematdots"
+        if args.moe_partial:
+            name += "_moepartial"
+        if args.rolled:
+            name += "_rolled"
+        path = os.path.join(args.out, name + ".json")
+        if os.path.exists(path):
+            print(f"[skip existing] {name}")
+            continue
+        print(f"[run] {name}", flush=True)
+        kw = dict(multi_pod=mp, seq_parallel_kv=args.seq_parallel_kv,
+                  fsdp=False if args.no_fsdp else None,
+                  dp_only=args.dp_only,
+                  remat_policy="dots" if args.remat_dots else "nothing",
+                  moe_fsdp_mode="partial" if args.moe_partial else "gather")
+        if args.extrapolate:
+            rec = run_cell_extrapolated(a, s, **kw)
+        else:
+            rec = run_cell(a, s, unroll=not args.rolled, **kw)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" bottleneck={r['bottleneck']}"
+                     f" t={r['step_time_s']:.4f}s"
+                     f" compile={rec.get('compile_s', 0) or 0:.1f}s")
+        elif status == "error":
+            extra = " " + rec["error"][:200]
+        print(f"  -> {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Post-SPMD HLO analysis: collective wire-byte counts + roofline terms.
+
+``compiled.as_text()`` (optimized HLO, collectives already inserted by the
+SPMD partitioner) is scanned for all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops.  Each op contributes its **wire bytes
+per participant** under ring/torus algorithms:
+
+  all-reduce      2 x operand   (reduce-scatter + all-gather phases)
+  all-gather      1 x result    (result = n x operand; each device moves ~n-1
+                                 operand-sized chunks ~= result)
+  reduce-scatter  1 x operand   (result is operand/n — counting the result
+                                 would understate wire traffic n-fold)
+  all-to-all      1 x operand
+  collective-permute 1 x operand
+
+This is the per-device payload the ICI term divides by link bandwidth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+# "<result part> = <op>(<operands...>)" — result part may be a tuple.
+_LINE_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<kind>" + "|".join(_COLLECTIVES) + r")(?P<suffix>-start|-done)?"
+    r"\((?P<operands>[^)]*)\)")
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        nb = _DTYPE_BYTES.get(dtype)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Wire bytes per participating device, per collective kind."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for m in _LINE_RE.finditer(hlo_text):
+        kind = m.group("kind")
+        # -done ops repeat the -start payload; count each logical op once.
+        if m.group("suffix") == "-done":
+            continue
+        operand_bytes = _shapes_bytes(m.group("operands"))
+        result_bytes = _shapes_bytes(m.group("result"))
+        if kind == "all-reduce":
+            wire = 2 * operand_bytes
+        elif kind == "all-gather":
+            wire = result_bytes
+        else:  # reduce-scatter / all-to-all / collective-permute
+            wire = operand_bytes
+        out[kind] += wire
+        out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline (seconds) for one compiled step on one mesh."""
+
+    flops: float               # HLO flops (global)
+    hbm_bytes: float           # analytic HBM bytes (global)
+    coll_bytes: float          # collective wire bytes (per device)
+    chips: int
+    peak_flops: float
+    hbm_bw: float
+    ici_bw: float
+    ici_links: int = 4          # v5e: 4 usable ICI links per chip (2D torus)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * self.peak_flops)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * self.hbm_bw)
+
+    @property
+    def t_collective(self) -> float:
+        # coll_bytes is per-device wire payload; each chip drives ici_links
+        # links concurrently under ring/torus schedules.
+        return self.coll_bytes / (self.ici_links * self.ici_bw)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time,
+        }

@@ -1,0 +1,98 @@
+"""pjit train-step construction + sharding spec derivation (pod scale).
+
+Shared by the dry-run (AOT lower/compile) and the real launcher: the same
+``make_train_step`` output is either ``.lower().compile()``'d against
+abstract inputs or executed on a live mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.dist.sharding import ParallelCtx
+from repro.models.model import Model
+from repro.optim.optimizers import Optimizer, make_optimizer
+
+FSDP_THRESHOLD_BYTES = 1 << 30  # shard params over data axes above 1 GB/chip
+
+
+def build_ctx(cfg: ArchConfig, mesh, *, fsdp: bool | None = None,
+              seq_parallel_kv: bool = False, remat: bool = True,
+              dp_only: bool = False, remat_policy: str = "nothing",
+              moe_fsdp_mode: str = "gather") -> ParallelCtx:
+    ctx = ParallelCtx(mesh=mesh, fsdp=False, seq_parallel_kv=seq_parallel_kv,
+                      remat=remat, dp_only=dp_only, remat_policy=remat_policy,
+                      moe_fsdp_mode=moe_fsdp_mode)
+    if fsdp is None and mesh is not None:
+        per_chip = cfg.param_count() * 2 / max(ctx.tp_size, 1)
+        fsdp = per_chip > FSDP_THRESHOLD_BYTES or dp_only
+    ctx.fsdp = bool(fsdp)
+    return ctx
+
+
+def make_train_step(model: Model, opt: Optimizer):
+    def train_step(params, opt_state, batch, lr):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_and_metrics, has_aux=True)(params, batch)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        return params, opt_state, loss, metrics
+
+    return train_step
+
+
+def _pad_spec(spec: P, ndim: int) -> tuple:
+    t = tuple(spec)
+    return t + (None,) * (ndim - len(t))
+
+
+def opt_state_specs(opt_name: str, param_specs: Any, params_abs: Any,
+                    momentum: bool = True) -> Any:
+    """PartitionSpec tree for the optimizer state (mirrors ZeRO sharding)."""
+    if opt_name == "sgd":
+        return param_specs if momentum else ()
+    if opt_name == "adamw":
+        return {"m": param_specs, "v": param_specs, "t": P()}
+    if opt_name == "rmsprop":
+        return {"v": param_specs, "m": param_specs}
+    if opt_name == "adafactor":
+        def one(spec, ab):
+            s = _pad_spec(spec, ab.ndim)
+            if ab.ndim >= 2:
+                return {"r": P(*s[:-1]), "c": P(*(s[:-2] + (s[-1],)))}
+            return {"v": P(*s)}
+        return {
+            "s": jax.tree.map(one, param_specs, params_abs,
+                              is_leaf=lambda x: isinstance(x, P)),
+            "t": P(),
+        }
+    raise ValueError(opt_name)
+
+
+def shardings_for(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_train_state(model: Model, opt: Optimizer, dtype=jnp.bfloat16):
+    """(params_abs, opt_abs, param_specs, opt_specs) — all abstract."""
+    params_abs = model.abstract_params(dtype)
+    param_specs = model.param_specs(dtype)
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    momentum = bool(jax.tree.leaves(opt_abs)) if opt.name == "sgd" else True
+    opt_specs = opt_state_specs(opt.name, param_specs, params_abs, momentum)
+    return params_abs, opt_abs, param_specs, opt_specs
+
+
+def optimizer_for(cfg: ArchConfig) -> Optimizer:
+    if cfg.optimizer == "adafactor":
+        return make_optimizer("adafactor")
+    if cfg.optimizer == "adamw":
+        # f32 moments (standard); ZeRO-sharded with the params
+        return make_optimizer("adamw", state_dtype=jnp.float32)
+    return make_optimizer(cfg.optimizer)

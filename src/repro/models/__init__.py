@@ -1,0 +1,2 @@
+"""Pure-JAX model zoo: dense/MoE/SSM/hybrid/enc-dec/VLM LM families."""
+from repro.models.model import Model, build_model  # noqa: F401

@@ -1,0 +1,70 @@
+"""Small conv classifier — the paper's own model family (WideResNet-flavored).
+
+Used by the paper-reproduction benchmarks (Tables 2/5/6, Figs. 2/4) on the
+synthetic easy/hard classification dataset; PA is exact top-1 correctness and
+PC the max softmax probability, exactly as in the paper (Eq. 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, init_params, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str = "paper_cifar_cnn"
+    image_size: int = 16
+    channels: int = 3
+    widths: tuple[int, ...] = (32, 64)
+    num_classes: int = 10
+    hidden: int = 128
+
+
+def param_defs(cfg: CNNConfig) -> dict:
+    defs = {}
+    cin = cfg.channels
+    for i, w in enumerate(cfg.widths):
+        defs[f"conv{i}"] = ParamDef((3, 3, cin, w), (None, None, None, None),
+                                    scale=(2.0 / (9 * cin)) ** 0.5)
+        defs[f"convb{i}"] = ParamDef((w,), (None,), init="zeros")
+        cin = w
+    feat = (cfg.image_size // (2 ** len(cfg.widths))) ** 2 * cfg.widths[-1]
+    defs["fc1"] = ParamDef((feat, cfg.hidden), (None, None))
+    defs["fc1b"] = ParamDef((cfg.hidden,), (None,), init="zeros")
+    defs["fc2"] = ParamDef((cfg.hidden, cfg.num_classes), (None, None))
+    defs["fc2b"] = ParamDef((cfg.num_classes,), (None,), init="zeros")
+    return defs
+
+
+def init(rng: jax.Array, cfg: CNNConfig) -> dict:
+    return init_params(rng, param_defs(cfg))
+
+
+def forward(params: dict, cfg: CNNConfig, images: jax.Array) -> jax.Array:
+    """images: (B, H, W, C) -> logits (B, num_classes)."""
+    x = images
+    for i in range(len(cfg.widths)):
+        x = jax.lax.conv_general_dilated(
+            x, params[f"conv{i}"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + params[f"convb{i}"])
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"] + params["fc1b"])
+    return x @ params["fc2"] + params["fc2b"]
+
+
+def per_sample_metrics(logits: jax.Array, labels: jax.Array):
+    """(loss, PA, PC) per sample — paper Eq. 3 semantics."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[:, None], axis=-1)[:, 0]
+    loss = lse - gold
+    pa = jnp.argmax(lf, axis=-1) == labels
+    pc = jnp.exp(jnp.max(lf, axis=-1) - lse)
+    return loss, pa, pc

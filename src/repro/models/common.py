@@ -1,0 +1,130 @@
+"""Shared model building blocks: param definitions, norms, rotary, inits.
+
+Parameters are described declaratively by ``ParamDef`` pytrees so that the
+same structure yields (a) ``jax.eval_shape``-compatible abstract params for
+the dry-run, (b) initialized values, and (c) logical-axis PartitionSpecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Logical = tuple  # tuple of logical axis names / None, one per dim
+
+# ---------------------------------------------------------------------------
+# Layer-loop scan with a controllable unroll factor.
+#
+# XLA's cost analysis counts a while-loop body ONCE regardless of trip count,
+# so the dry-run fully unrolls the layer loop (``with scan_unroll(L):``) to
+# obtain true FLOP / byte / collective totals for the roofline; training and
+# serving keep the rolled loop (fast compiles, small HLO).
+# ---------------------------------------------------------------------------
+import contextlib
+import contextvars
+
+_SCAN_UNROLL: contextvars.ContextVar[int] = contextvars.ContextVar(
+    "scan_unroll", default=1)
+
+
+@contextlib.contextmanager
+def scan_unroll(n: int):
+    tok = _SCAN_UNROLL.set(max(int(n), 1))
+    try:
+        yield
+    finally:
+        _SCAN_UNROLL.reset(tok)
+
+
+def layer_scan(f, init, xs):
+    return jax.lax.scan(f, init, xs, unroll=_SCAN_UNROLL.get())
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical: Logical            # len == len(shape)
+    init: str = "normal"        # normal | zeros | ones | embed | conv
+    scale: float | None = None  # override init scale
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def stack_defs(defs: Any, num_layers: int) -> Any:
+    """Prepend a layer dim to every ParamDef (for scan-over-layers)."""
+    return jax.tree.map(
+        lambda d: ParamDef((num_layers, *d.shape), (None, *d.logical),
+                           d.init, d.scale, d.dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def abstract_params(defs: Any, dtype=None) -> Any:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype or d.dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def logical_tree(defs: Any) -> Any:
+    return jax.tree.map(lambda d: d.logical, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def init_params(rng: jax.Array, defs: Any, dtype=None) -> Any:
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(rng, len(leaves))
+
+    def _one(key, d: ParamDef):
+        dt = dtype or d.dtype
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dt)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dt)
+        if d.init == "a_log":  # mamba A_log init: log(uniform[1,16])
+            u = jax.random.uniform(key, d.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(dt)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        if d.init == "embed":
+            scale = d.scale or 1.0
+        else:
+            scale = d.scale or (1.0 / max(fan_in, 1)) ** 0.5
+        return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(dt)
+
+    return jax.tree.unflatten(treedef, [_one(k, d) for k, d in zip(keys, leaves)])
+
+
+# ---------------------------------------------------------------------------
+# Numeric building blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def gated_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+              w_down: jax.Array) -> jax.Array:
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, w_gate.astype(x.dtype)))
+    u = jnp.einsum("bsd,df->bsf", x, w_up.astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", g * u, w_down.astype(x.dtype))

@@ -1,0 +1,241 @@
+"""Encoder-decoder backbone (seamless-m4t-v2 text/audio translation).
+
+Per the assignment the modality frontend is a STUB: the encoder consumes
+precomputed audio-frame embeddings (B, S_enc, encoder_input_dim) delivered by
+``input_specs()``; everything from the first projection onward is real.
+Decoder = causal self-attention + cross-attention + gated MLP, scanned.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import ParallelCtx
+from repro.models import attention as attn
+from repro.models.common import layer_scan as _scan
+from repro.models.common import ParamDef, gated_mlp, rms_norm, stack_defs
+from repro.models.transformer import token_metrics
+
+
+def _remat_policy(ctx):
+    if getattr(ctx, "remat_policy", "nothing") == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _mlp_defs(d: int, ff: int) -> dict:
+    return {
+        "w_gate": ParamDef((d, ff), ("fsdp", "tp")),
+        "w_up": ParamDef((d, ff), ("fsdp", "tp")),
+        "w_down": ParamDef((ff, d), ("tp", "fsdp")),
+    }
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    nq, nkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    enc_block = {
+        "ln1": ParamDef((d,), (None,), init="ones"),
+        "attn": attn.attn_param_defs(d, nq, nkv, dh, cfg.qk_norm),
+        "ln2": ParamDef((d,), (None,), init="ones"),
+        "mlp": _mlp_defs(d, cfg.d_ff),
+    }
+    dec_block = {
+        "ln1": ParamDef((d,), (None,), init="ones"),
+        "attn": attn.attn_param_defs(d, nq, nkv, dh, cfg.qk_norm),
+        "lnx": ParamDef((d,), (None,), init="ones"),
+        "xattn": attn.attn_param_defs(d, nq, nkv, dh, False),
+        "ln2": ParamDef((d,), (None,), init="ones"),
+        "mlp": _mlp_defs(d, cfg.d_ff),
+    }
+    return {
+        "enc_in": ParamDef((cfg.encoder_input_dim, d), (None, "fsdp")),
+        "enc_layers": stack_defs(enc_block, cfg.num_encoder_layers),
+        "enc_norm": ParamDef((d,), (None,), init="ones"),
+        "embed": ParamDef((v, d), ("tp", "fsdp"), init="embed", scale=0.02),
+        "dec_layers": stack_defs(dec_block, cfg.num_layers),
+        "out_norm": ParamDef((d,), (None,), init="ones"),
+        "lm_head": ParamDef((d, v), ("fsdp", "tp")),
+    }
+
+
+def _xattn_qkv(p: dict, h_dec: jax.Array, enc_out: jax.Array, dt):
+    q = jnp.einsum("bsd,dhk->bshk", h_dec, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+    return q, k, v
+
+
+def _cdtype(params):
+    dt = params["embed"].dtype
+    return jnp.bfloat16 if dt.itemsize == 1 else dt
+
+
+def encode(cfg: ArchConfig, ctx: ParallelCtx, params: dict,
+           frames: jax.Array) -> jax.Array:
+    dt = _cdtype(params)
+    x = jnp.einsum("bse,ed->bsd", frames.astype(dt), params["enc_in"].astype(dt))
+    x = ctx.cs(x, "batch", None, None)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, layer_p):
+        h = rms_norm(x, layer_p["ln1"], cfg.norm_eps)
+        q, k, v = attn.project_qkv(layer_p["attn"], h, positions,
+                                   cfg.rope_theta, cfg.qk_norm, cfg.norm_eps)
+        a = attn.attend(q, k, v, causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", a,
+                           layer_p["attn"]["wo"].astype(x.dtype))
+        h2 = rms_norm(x, layer_p["ln2"], cfg.norm_eps)
+        x = x + gated_mlp(h2, layer_p["mlp"]["w_gate"], layer_p["mlp"]["w_up"],
+                          layer_p["mlp"]["w_down"])
+        return ctx.cs(x, "batch", None, None), None
+
+    fn = body
+    if ctx.remat:
+        fn = jax.checkpoint(body, policy=_remat_policy(ctx))
+    x, _ = _scan(fn, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _decoder_block(cfg, ctx, layer_p, x, enc_out, positions):
+    h = rms_norm(x, layer_p["ln1"], cfg.norm_eps)
+    q, k, v = attn.project_qkv(layer_p["attn"], h, positions, cfg.rope_theta,
+                               cfg.qk_norm, cfg.norm_eps)
+    a = attn.attend(q, k, v, causal=True)
+    x = x + jnp.einsum("bshk,hkd->bsd", a,
+                       layer_p["attn"]["wo"].astype(x.dtype))
+    hx = rms_norm(x, layer_p["lnx"], cfg.norm_eps)
+    qx, kx, vx = _xattn_qkv(layer_p["xattn"], hx, enc_out, x.dtype)
+    ax = attn.cross_attend(qx, kx, vx)
+    x = x + jnp.einsum("bshk,hkd->bsd", ax,
+                       layer_p["xattn"]["wo"].astype(x.dtype))
+    h2 = rms_norm(x, layer_p["ln2"], cfg.norm_eps)
+    x = x + gated_mlp(h2, layer_p["mlp"]["w_gate"], layer_p["mlp"]["w_up"],
+                      layer_p["mlp"]["w_down"])
+    return ctx.cs(x, "batch", None, None)
+
+
+def forward(cfg: ArchConfig, ctx: ParallelCtx, params: dict,
+            batch: dict) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Train forward. batch: frames (B,S_enc,E), tokens (B,S_dec), mask."""
+    enc_out = encode(cfg, ctx, params, batch["frames"])
+    tokens = batch["tokens"]
+    x = params["embed"].astype(enc_out.dtype)[tokens]
+    x = ctx.cs(x, "batch", None, None)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, layer_p):
+        return _decoder_block(cfg, ctx, layer_p, x, enc_out, positions), None
+
+    fn = body
+    if ctx.remat:
+        fn = jax.checkpoint(body, policy=_remat_policy(ctx))
+    x, _ = _scan(fn, x, params["dec_layers"])
+    x = rms_norm(x, params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    mask = batch.get("mask", jnp.ones(tokens.shape, bool))
+    return ctx.cs(logits, "batch", None, "tp"), mask, jnp.float32(0.0)
+
+
+# --- serving ---------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, enc_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    L = cfg.num_layers
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "len": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros((L, batch, max_len, hkv, dh), dtype),
+        "v": jnp.zeros((L, batch, max_len, hkv, dh), dtype),
+        "xk": jnp.zeros((L, batch, enc_len, hkv, dh), dtype),
+        "xv": jnp.zeros((L, batch, enc_len, hkv, dh), dtype),
+    }
+
+
+def prefill(cfg: ArchConfig, ctx: ParallelCtx, params: dict, batch: dict,
+            max_len: int | None = None) -> tuple[jax.Array, dict]:
+    """Encode + precompute per-layer cross K/V + run decoder prompt."""
+    enc_out = encode(cfg, ctx, params, batch["frames"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = params["embed"].astype(enc_out.dtype)[tokens]
+    positions = jnp.arange(s)[None, :]
+
+    def body(x, layer_p):
+        h = rms_norm(x, layer_p["ln1"], cfg.norm_eps)
+        q, k, v = attn.project_qkv(layer_p["attn"], h, positions,
+                                   cfg.rope_theta, cfg.qk_norm, cfg.norm_eps)
+        a = attn.attend(q, k, v, causal=True)
+        x = x + jnp.einsum("bshk,hkd->bsd", a,
+                           layer_p["attn"]["wo"].astype(x.dtype))
+        hx = rms_norm(x, layer_p["lnx"], cfg.norm_eps)
+        qx, kx, vx = _xattn_qkv(layer_p["xattn"], hx, enc_out, x.dtype)
+        ax = attn.cross_attend(qx, kx, vx)
+        x = x + jnp.einsum("bshk,hkd->bsd", ax,
+                           layer_p["xattn"]["wo"].astype(x.dtype))
+        h2 = rms_norm(x, layer_p["ln2"], cfg.norm_eps)
+        x = x + gated_mlp(h2, layer_p["mlp"]["w_gate"], layer_p["mlp"]["w_up"],
+                          layer_p["mlp"]["w_down"])
+        return x, {"k": k, "v": v, "xk": kx, "xv": vx}
+
+    x, emitted = _scan(body, x, params["dec_layers"])
+    cache = init_cache(cfg, b, max_len, enc_out.shape[1], dtype=x.dtype)
+    cache["k"] = cache["k"].at[:, :, :s].set(emitted["k"].astype(cache["k"].dtype))
+    cache["v"] = cache["v"].at[:, :, :s].set(emitted["v"].astype(cache["v"].dtype))
+    cache["xk"] = emitted["xk"].astype(cache["xk"].dtype)
+    cache["xv"] = emitted["xv"].astype(cache["xv"].dtype)
+    cache["len"] = jnp.full((), s, jnp.int32)
+    x = rms_norm(x[:, -1:], params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits, cache
+
+
+def decode_step(cfg: ArchConfig, ctx: ParallelCtx, params: dict,
+                token: jax.Array, cache: dict) -> tuple[jax.Array, dict]:
+    dt = _cdtype(params)
+    x = params["embed"].astype(dt)[token]
+    cache_len = cache["len"]
+    positions = cache_len[None, None] + jnp.zeros((x.shape[0], 1), jnp.int32)
+    layer_caches = {k: v for k, v in cache.items() if k != "len"}
+
+    def body(x, xs):
+        layer_p, lc = xs
+        h = rms_norm(x, layer_p["ln1"], cfg.norm_eps)
+        q, k, v = attn.project_qkv(layer_p["attn"], h, positions,
+                                   cfg.rope_theta, cfg.qk_norm, cfg.norm_eps)
+        kc, vc = attn.update_cache(lc["k"], lc["v"], k.astype(lc["k"].dtype),
+                                   v.astype(lc["v"].dtype), cache_len)
+        a = attn.decode_attend(q, kc, vc, cache_len + 1)
+        x = x + jnp.einsum("bshk,hkd->bsd", a,
+                           layer_p["attn"]["wo"].astype(x.dtype))
+        hx = rms_norm(x, layer_p["lnx"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", hx, layer_p["xattn"]["wq"].astype(x.dtype))
+        ax = attn.decode_attend(qx, lc["xk"], lc["xv"],
+                                jnp.full((), lc["xk"].shape[1], jnp.int32))
+        x = x + jnp.einsum("bshk,hkd->bsd", ax,
+                           layer_p["xattn"]["wo"].astype(x.dtype))
+        h2 = rms_norm(x, layer_p["ln2"], cfg.norm_eps)
+        x = x + gated_mlp(h2, layer_p["mlp"]["w_gate"], layer_p["mlp"]["w_up"],
+                          layer_p["mlp"]["w_down"])
+        return x, {"k": kc, "v": vc, "xk": lc["xk"], "xv": lc["xv"]}
+
+    x, new_caches = _scan(body, x, (params["dec_layers"], layer_caches))
+    x = rms_norm(x, params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    new_cache = dict(new_caches)
+    new_cache["len"] = cache_len + 1
+    return logits, new_cache
+
+
+def per_sample_metrics(cfg, logits, labels, mask, pa_threshold: float = 0.5):
+    ce, correct, pmax = token_metrics(logits, labels)
+    m = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(m, axis=-1), 1.0)
+    loss = jnp.sum(ce * m, axis=-1) / denom
+    acc = jnp.sum(correct.astype(jnp.float32) * m, axis=-1) / denom
+    return loss, acc >= pa_threshold, jnp.sum(pmax * m, axis=-1) / denom

@@ -1,0 +1,194 @@
+"""Mixture-of-Experts FFN with expert parallelism (EP over the "model" axis).
+
+TPU-idiomatic dispatch: no ragged all-to-all. Each data shard routes its own
+tokens into a capacity buffer (E, C, d) via sort-based position assignment,
+every model shard computes only its local experts' slice, and one psum over
+"model" combines the outputs — the standard EP combine collective.  Expert
+weights are additionally FSDP-sharded over the data axes for the 1T config
+and all-gathered per layer inside the scan body (ZeRO-3 style).
+
+Runs in three modes from one code path:
+  - local (mesh=None): E_loc = E, no collectives (smoke tests);
+  - under shard_map over ("pod","data","model") for the distributed model.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef
+from repro.configs.base import MoEConfig, round_up
+
+try:  # JAX >= 0.4.35 exposes shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from jax.sharding import PartitionSpec as P
+
+
+def moe_param_defs(d_model: int, moe: MoEConfig,
+                   mode: str = "gather") -> dict:
+    """mode="gather": FSDP shards d_model; weights are all-gathered per layer
+    (ZeRO-3).  mode="partial": FSDP shards d_ff; expert matmuls run on the
+    local ff slice and the (small) expert outputs are psum'd — no weight
+    gathers at all, the right trade when tokens-per-step is small (decode).
+    """
+    e, ff = moe.num_experts, moe.d_ff_expert
+    if mode == "partial":
+        return {
+            "router": ParamDef((d_model, e), (None, None), scale=0.02),
+            "w_gate": ParamDef((e, d_model, ff), ("exp", None, "fsdp")),
+            "w_up": ParamDef((e, d_model, ff), ("exp", None, "fsdp")),
+            "w_down": ParamDef((e, ff, d_model), ("exp", "fsdp", None)),
+        }
+    return {
+        "router": ParamDef((d_model, e), (None, None), scale=0.02),
+        "w_gate": ParamDef((e, d_model, ff), ("exp", "fsdp", None)),
+        "w_up": ParamDef((e, d_model, ff), ("exp", "fsdp", None)),
+        "w_down": ParamDef((e, ff, d_model), ("exp", None, "fsdp")),
+    }
+
+
+def _route_local(p: dict, x: jax.Array, moe: MoEConfig, e0: jax.Array,
+                 e_loc: int, fsdp_axes: tuple[str, ...],
+                 model_axis: str | None, mode: str = "gather"):
+    """Core routing+compute for one device's tokens. x: (B_loc, S, d)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.num_experts, moe.top_k
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                      # (T,k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)      # renormalize
+
+    # Load-balancing aux loss (Switch-style): E * sum_e f_e * p_e.
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=1), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_e * p_e)
+
+    # ---- capacity assignment via sort (O(Tk log Tk), tiny memory) ----------
+    cap = round_up(int(moe.capacity_factor * k * t / e) + 1, 8)
+    flat_e = top_e.reshape(-1)                                  # (T*k,)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))       # (E,)
+    pos_sorted = jnp.arange(t * k) - seg_start[sorted_e]
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))                            # (T*k,)
+    keep = pos < cap
+
+    # ---- dispatch: scatter tokens into (E*cap, d) ---------------------------
+    dst = jnp.where(keep, flat_e * cap + pos, e * cap)          # overflow slot
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    src = jnp.repeat(xf, k, axis=0)                             # (T*k, d)
+    buf = buf.at[dst].add(src)                                  # duplicates impossible
+    buf = buf[: e * cap].reshape(e, cap, d)
+
+    # ---- local expert slice --------------------------------------------------
+    buf_loc = jax.lax.dynamic_slice_in_dim(buf, e0, e_loc, axis=0)
+    wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    if mode == "partial" and fsdp_axes:
+        # d_ff stays sharded: full-d matmuls on the local ff slice; the
+        # (E_loc, C, d) ff-partials are psum'd over the fsdp axes.  Callers
+        # must present IDENTICAL tokens on every fsdp shard (moe_ffn
+        # all-gathers the token batch first — only sane when T is small,
+        # i.e. the decode path).  Zero weight-gather traffic.
+        h = jnp.einsum("ecd,edf->ecf", buf_loc, wg.astype(x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", buf_loc, wu.astype(x.dtype))
+        out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u,
+                         wd.astype(x.dtype))
+        for ax in fsdp_axes:
+            out = jax.lax.psum(out, ax)
+    else:
+        # ZeRO-3 gather of this layer's expert weights; innermost mesh axis
+        # first so tiled concat reconstructs the (pod-major) layout.
+        for ax in reversed(fsdp_axes):
+            wg = jax.lax.all_gather(wg, ax, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, ax, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, ax, axis=2, tiled=True)
+        h = jnp.einsum("ecd,edf->ecf", buf_loc, wg.astype(x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", buf_loc, wu.astype(x.dtype))
+        out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u,
+                         wd.astype(x.dtype))
+
+    # ---- combine: gather back + weighted sum over k --------------------------
+    idx = flat_e * cap + pos                                    # (T*k,) global slots
+    local = (flat_e >= e0) & (flat_e < e0 + e_loc) & keep
+    lidx = jnp.where(local, (flat_e - e0) * cap + pos, 0)
+    vals = out.reshape(e_loc * cap, d)[lidx]
+    vals = jnp.where(local[:, None], vals, 0.0)
+    y = jnp.sum(
+        vals.reshape(t, k, d) * top_p[..., None].astype(x.dtype), axis=1)
+    if model_axis is not None:
+        y = jax.lax.psum(y, model_axis)
+    return y.reshape(b, s, d), aux
+
+
+def moe_ffn(p: dict, x: jax.Array, moe: MoEConfig, ctx) -> tuple[jax.Array, jax.Array]:
+    """MoE FFN. Returns (y, aux_loss). x: (B, S, d_model) global."""
+    if ctx is None or ctx.mesh is None or ctx.tp_axis is None:
+        y, aux = _route_local(p, x, moe, jnp.int32(0), moe.num_experts, (),
+                              None)
+        return y, aux
+    mode = getattr(ctx, "moe_fsdp_mode", "gather")
+
+    e = moe.num_experts
+    tp = ctx.tp_size
+    e_loc = e // tp
+    assert e % tp == 0, f"{e} experts not divisible by tp={tp}"
+    fsdp_axes = ctx.dp_axes if ctx.fsdp else ()
+    dp = ctx.dp_axes
+
+    def inner(p_in, x_in):
+        e0 = jax.lax.axis_index("model") * e_loc
+        if mode == "partial" and ctx.fsdp:
+            # Decode-path EP: replicate the (tiny) token batch across the
+            # data axes, compute ff-partials against the resident weight
+            # shards, psum, then slice this shard's batch back out.  Trades
+            # an O(T*d) token all-gather for the O(params) weight gathers.
+            b_loc = x_in.shape[0]
+            x_all = x_in
+            for ax in reversed(dp):
+                x_all = jax.lax.all_gather(x_all, ax, axis=0, tiled=True)
+            y_all, aux = _route_local(p_in, x_all, moe, e0, e_loc, dp,
+                                      "model", mode)
+            idx = jnp.int32(0)
+            for ax in dp:
+                idx = idx * ctx.mesh.shape[ax] + jax.lax.axis_index(ax)
+            y = jax.lax.dynamic_slice_in_dim(y_all, idx * b_loc, b_loc, 0)
+            return y, aux
+        y, aux = _route_local(p_in, x_in, moe, e0, e_loc, fsdp_axes, "model",
+                              mode)
+        # aux differs per data shard; average it so the P() out_spec is sound.
+        for ax in dp:
+            aux = jax.lax.pmean(aux, ax)
+        return y, aux
+
+    if mode == "partial":
+        pspec = {
+            "router": P(),
+            "w_gate": P("model", None, dp if ctx.fsdp else None),
+            "w_up": P("model", None, dp if ctx.fsdp else None),
+            "w_down": P("model", dp if ctx.fsdp else None, None),
+        }
+    else:
+        pspec = {
+            "router": P(),
+            "w_gate": P("model", dp if ctx.fsdp else None, None),
+            "w_up": P("model", dp if ctx.fsdp else None, None),
+            "w_down": P("model", None, dp if ctx.fsdp else None),
+        }
+    xspec = P(dp, None, None)
+    y, aux = _shard_map(
+        inner, mesh=ctx.mesh,
+        in_specs=(pspec, xspec),
+        out_specs=(xspec, P()),
+        check_vma=False,
+    )(p, x)
+    return y, aux

@@ -1,0 +1,204 @@
+"""Mamba2 SSD (state-space duality) block — chunked scan + recurrent decode.
+
+Follows the minimal SSD formulation (Dao & Gu 2024, arXiv:2405.21060):
+  h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t (x)    per head, state size N
+  y_t = C_t . h_t + D * x_t
+computed chunk-parallel: intra-chunk attention-like matmuls (MXU friendly)
+plus an inter-chunk state recurrence over S/chunk steps (lax.scan).
+
+Single B/C group (n_groups=1) as in mamba2-130m. Depthwise conv of width
+``conv_width`` over (x, B, C) precedes the scan; decode keeps a ring buffer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef
+
+
+def ssm_param_defs(d_model: int, ssm, d_inner: int) -> dict:
+    n, nh = ssm.state_dim, d_inner // ssm.head_dim
+    conv_dim = d_inner + 2 * n
+    return {
+        # in_proj -> z (gate, d_inner) | x (d_inner) | B (N) | C (N) | dt (nh)
+        "w_in": ParamDef((d_model, 2 * d_inner + 2 * n + nh), ("fsdp", "tp")),
+        "conv_w": ParamDef((ssm.conv_width, conv_dim), (None, "tp"), init="normal",
+                           scale=0.5),
+        "conv_b": ParamDef((conv_dim,), ("tp",), init="zeros"),
+        "a_log": ParamDef((nh,), (None,), init="a_log"),
+        "d_skip": ParamDef((nh,), (None,), init="ones"),
+        "dt_bias": ParamDef((nh,), (None,), init="zeros"),
+        "norm_w": ParamDef((d_inner,), ("tp",), init="ones"),
+        "w_out": ParamDef((d_inner, d_model), ("tp", "fsdp")),
+    }
+
+
+def _split_in(p, x, d_inner, n, nh):
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(x.dtype))
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbcdt = xbc_dt
+    xin, b, c, dt = jnp.split(xbcdt, [d_inner, d_inner + n, d_inner + 2 * n], axis=-1)
+    return z, xin, b, c, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq. xbc: (B,S,C); w: (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :]
+        for i in range(width)
+    )
+    return jax.nn.silu(out + bias[None, None, :])
+
+
+def ssd_scan_ref(x, dt, a_log, b, c, d_skip, chunk: int):
+    """Chunked SSD. x: (B,S,NH,P); dt: (B,S,NH); b,c: (B,S,N). Returns y, final state.
+
+    Pure-jnp oracle; the Pallas `ssd_scan` kernel implements the same math
+    with VMEM-tiled chunks.  S is padded up to a chunk multiple with dt=0
+    positions (identity state transition, zero contribution) so any length
+    works.
+    """
+    B, S, NH, P = x.shape
+    s_orig = S
+    if S % chunk:
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        # pad dt with -inf so softplus(dt)=0 -> exp(0*a)=1: identity update
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=-1e30)
+        S = S + pad
+    N = b.shape[-1]
+    nc = S // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))               # (NH,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32))          # (B,S,NH) > 0
+    dta = dt * a[None, None, :]                           # (B,S,NH) negative
+
+    xr = x.reshape(B, nc, chunk, NH, P)
+    dtr = dt.reshape(B, nc, chunk, NH)
+    dtar = dta.reshape(B, nc, chunk, NH)
+    br = b.reshape(B, nc, chunk, N)
+    cr = c.reshape(B, nc, chunk, N)
+
+    cum = jnp.cumsum(dtar, axis=2)                        # (B,nc,l,NH)
+    seg_total = cum[:, :, -1]                             # (B,nc,NH)
+
+    # Intra-chunk ("diagonal block"): y_intra[t] = sum_{s<=t} C_t.B_s dt_s
+    #   exp(cum_t - cum_s) x_s
+    # Mask BEFORE the exp: for t < s the exponent is positive and can
+    # overflow; where(mask, exp(big), 0) still back-propagates inf*0 = NaN.
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    diff = cum[:, :, :, None] - cum[:, :, None, :]             # (B,nc,t,s,NH)
+    decay = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -1e30))
+    cb = jnp.einsum("bctn,bcsn->bcts", cr, br)                 # (B,nc,t,s)
+    scores = cb[..., None] * decay                             # (B,nc,t,s,NH)
+    y_intra = jnp.einsum("bctsh,bcsh,bcshp->bcthp",
+                         scores, dtr, xr.astype(jnp.float32))
+
+    # Chunk states: state_c = sum_s exp(cum_last - cum_s) dt_s B_s x_s^T
+    sdecay = jnp.exp(seg_total[:, :, None, :] - cum)           # (B,nc,s,NH)
+    states = jnp.einsum("bcsh,bcsh,bcsn,bcshp->bchnp",
+                        sdecay, dtr, br, xr.astype(jnp.float32))
+
+    # Inter-chunk recurrence over nc chunks.
+    def body(h, xs):
+        st, seg = xs                                           # (B,NH,N,P),(B,NH)
+        h_new = h * jnp.exp(seg)[:, :, None, None] + st
+        return h_new, h                                        # emit state *before* chunk
+
+    h0 = jnp.zeros((B, NH, N, P), jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        body, h0,
+        (states.transpose(1, 0, 2, 3, 4), seg_total.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                   # (B,nc,NH,N,P)
+
+    # Contribution of the carried-in state to each position.
+    outdecay = jnp.exp(cum)                                    # (B,nc,t,NH)
+    y_inter = jnp.einsum("bctn,bcth,bchnp->bcthp", cr, outdecay, h_prev)
+
+    y = (y_intra + y_inter).reshape(B, S, NH, P)
+    y = y + d_skip[None, None, :, None].astype(jnp.float32) * x.astype(jnp.float32)
+    return y[:, :s_orig].astype(x.dtype), h_final
+
+
+def ssm_forward(p: dict, x: jax.Array, ssm, d_inner: int,
+                norm_eps: float = 1e-6, use_kernel: bool = False,
+                return_state: bool = False):
+    """Full-sequence SSD block forward. x: (B,S,d_model) -> (B,S,d_model).
+
+    With ``return_state`` also returns the decode cache (final SSM state +
+    conv ring buffer) so prefill can hand off to recurrent decoding.
+    """
+    n, nh, hd = ssm.state_dim, d_inner // ssm.head_dim, ssm.head_dim
+    z, xin, b, c, dt = _split_in(p, x, d_inner, n, nh)
+    xbc_pre = jnp.concatenate([xin, b, c], axis=-1)
+    xbc = _causal_conv(xbc_pre, p["conv_w"].astype(x.dtype),
+                       p["conv_b"].astype(x.dtype))
+    xin, b, c = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xh = xin.reshape(*xin.shape[:2], nh, hd)
+    dt = dt + p["dt_bias"][None, None, :].astype(dt.dtype)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, h_final = kops.ssd_scan(xh, dt, p["a_log"], b, c, p["d_skip"],
+                                   ssm.chunk)
+    else:
+        y, h_final = ssd_scan_ref(xh, dt, p["a_log"], b, c, p["d_skip"],
+                                  ssm.chunk)
+    y = y.reshape(*y.shape[:2], d_inner)
+    y = y * jax.nn.silu(z)  # gated
+    from repro.models.common import rms_norm
+    y = rms_norm(y, p["norm_w"], norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    if return_state:
+        conv_buf = xbc_pre[:, -(ssm.conv_width - 1):, :]
+        return out, h_final, conv_buf
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent) path
+# ---------------------------------------------------------------------------
+
+
+def ssm_init_cache(batch: int, ssm, d_inner: int, dtype=jnp.float32) -> dict:
+    n, nh, hd = ssm.state_dim, d_inner // ssm.head_dim, ssm.head_dim
+    conv_dim = d_inner + 2 * n
+    return {
+        "state": jnp.zeros((batch, nh, n, hd), jnp.float32),
+        "conv_buf": jnp.zeros((batch, ssm.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode_step(p: dict, x: jax.Array, cache: dict, ssm, d_inner: int,
+                    norm_eps: float = 1e-6):
+    """One-token recurrent update. x: (B,1,d_model)."""
+    n, nh, hd = ssm.state_dim, d_inner // ssm.head_dim, ssm.head_dim
+    z, xin, b, c, dt = _split_in(p, x, d_inner, n, nh)
+    xbc = jnp.concatenate([xin, b, c], axis=-1)          # (B,1,conv_dim)
+    window = jnp.concatenate([cache["conv_buf"], xbc], axis=1)  # (B,W,conv)
+    conv_w = p["conv_w"].astype(x.dtype)
+    out = jnp.einsum("bwc,wc->bc", window, conv_w) + p["conv_b"].astype(x.dtype)
+    xbc1 = jax.nn.silu(out)[:, None, :]
+    new_buf = window[:, 1:, :]
+    xin, b, c = jnp.split(xbc1, [d_inner, d_inner + n], axis=-1)
+    xh = xin.reshape(-1, nh, hd)                          # (B,NH,P)
+    b1, c1 = b[:, 0], c[:, 0]                             # (B,N)
+    dt1 = jax.nn.softplus(
+        (dt[:, 0] + p["dt_bias"][None, :]).astype(jnp.float32))  # (B,NH)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * a[None, :])                     # (B,NH)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt1, b1.astype(jnp.float32),
+                     xh.astype(jnp.float32))
+    state = cache["state"] * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", c1.astype(jnp.float32), state)
+    y = y + p["d_skip"][None, :, None].astype(jnp.float32) * xh.astype(jnp.float32)
+    y = y.reshape(-1, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    from repro.models.common import rms_norm
+    y = rms_norm(y, p["norm_w"], norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    return out, {"state": state, "conv_buf": new_buf}

@@ -1,0 +1,102 @@
+"""Fault tolerance & elasticity utilities.
+
+Three concerns at 1000+-node scale, each with a concrete mechanism here:
+
+1. **Node failure → checkpoint/restart.** ``repro.checkpoint`` provides
+   atomic, CRC-checked, async checkpoints; ``Trainer.restore_latest`` resumes
+   bit-exact (params, optimizer, sampler state incl. KAKURENBO's per-sample
+   loss/PA/PC — losing it would silently disable hiding for an epoch).
+   ``run_with_restarts`` below is the supervisor loop a cluster agent runs.
+
+2. **Elastic rescaling.** All sampler state is *global* (N-sized arrays);
+   workers own deterministic index slices (``data.pipeline.worker_slice``).
+   ``rescale_plan`` recomputes every worker's view for a new world size from
+   the same epoch permutation — no state migration, resume is bit-exact.
+
+3. **Straggler mitigation.** ``StragglerMonitor`` tracks per-step EMA
+   latency; a worker whose latency exceeds ``threshold`` x median is flagged
+   and ``rebalance`` shifts a fraction of its per-epoch samples to the
+   fastest workers (KAKURENBO composes naturally: hidden-set shrinkage is
+   uniform across shards, so re-slicing the visible list is safe).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.data.pipeline import worker_slice
+
+
+def run_with_restarts(make_trainer: Callable[[], "object"], total_epochs: int,
+                      max_restarts: int = 3) -> tuple[object, int]:
+    """Supervisor: (re)build the trainer, resume from the latest checkpoint,
+    run; on crash, restart. Returns (trainer, restarts_used)."""
+    restarts = 0
+    while True:
+        trainer = make_trainer()
+        trainer.restore_latest()
+        try:
+            trainer.run(total_epochs)
+            return trainer, restarts
+        except RuntimeError:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+
+
+@dataclasses.dataclass
+class RescalePlan:
+    world_size: int
+    per_worker: list[np.ndarray]
+
+
+def rescale_plan(epoch_indices: np.ndarray, new_world_size: int,
+                 batch_per_worker: int) -> RescalePlan:
+    """Deterministic re-slicing of an epoch's index list for a new world size."""
+    views = [worker_slice(epoch_indices, new_world_size, r, batch_per_worker)
+             for r in range(new_world_size)]
+    return RescalePlan(new_world_size, views)
+
+
+class StragglerMonitor:
+    def __init__(self, world_size: int, ema: float = 0.9,
+                 threshold: float = 1.5):
+        self.lat = np.zeros(world_size)
+        self.ema = ema
+        self.threshold = threshold
+
+    def record(self, rank: int, step_time: float) -> None:
+        a = self.ema
+        self.lat[rank] = (a * self.lat[rank] + (1 - a) * step_time
+                          if self.lat[rank] > 0 else step_time)
+
+    def stragglers(self) -> np.ndarray:
+        med = np.median(self.lat[self.lat > 0]) if (self.lat > 0).any() else 0.0
+        if med == 0.0:
+            return np.zeros(len(self.lat), bool)
+        return self.lat > self.threshold * med
+
+    def rebalance(self, per_worker: list[np.ndarray],
+                  shed_fraction: float = 0.25) -> list[np.ndarray]:
+        """Move a fraction of each straggler's remaining samples to the
+        fastest workers (work stealing at epoch granularity)."""
+        flags = self.stragglers()
+        if not flags.any():
+            return per_worker
+        out = [w.copy() for w in per_worker]
+        order = np.argsort(self.lat)           # fastest first
+        fast = [r for r in order if not flags[r]]
+        if not fast:
+            return per_worker
+        fi = 0
+        for r in np.nonzero(flags)[0]:
+            k = int(len(out[r]) * shed_fraction)
+            if k == 0:
+                continue
+            moved, out[r] = out[r][-k:], out[r][:-k]
+            tgt = fast[fi % len(fast)]
+            out[tgt] = np.concatenate([out[tgt], moved])
+            fi += 1
+        return out

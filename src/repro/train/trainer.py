@@ -1,0 +1,321 @@
+"""Epoch-based trainer integrating KAKURENBO and every baseline strategy.
+
+This is the host-side training loop used by the paper-reproduction
+experiments and the end-to-end examples (single process; the pod-scale pjit
+train step lives in ``repro.launch.train`` and shares the same Model API).
+
+Strategies: baseline | kakurenbo | iswr | forget | sb | gradmatch |
+random | infobatch.
+The trainer owns: jitted train/eval steps, the sampler, LR scheduling
+(incl. Eq. 8), work accounting (fwd/bwd sample counts — the quantity the
+paper's speedup comes from), checkpoint/restart and failure injection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import (
+    ForgetConfig, ForgetSampler, ISWRConfig, ISWRSampler, InfoBatchConfig,
+    InfoBatchSampler, KakurenboConfig, KakurenboSampler, LRSchedule,
+    SBConfig, SelectiveBackprop, GradMatchConfig, GradMatchSampler,
+)
+from repro.data.pipeline import Pipeline
+from repro.dist.compression import compress_grads, init_error_feedback
+from repro.optim.optimizers import Optimizer, make_optimizer
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    epochs: int = 10
+    batch_size: int = 64
+    strategy: str = "baseline"
+    optimizer: str = "sgd"
+    optimizer_hp: dict = dataclasses.field(
+        default_factory=lambda: {"momentum": 0.9})
+    lr: LRSchedule = dataclasses.field(
+        default_factory=lambda: LRSchedule(base_lr=0.05, kind="cosine",
+                                           total_epochs=10, warmup_epochs=1))
+    kakurenbo: KakurenboConfig = dataclasses.field(default_factory=KakurenboConfig)
+    iswr: ISWRConfig = dataclasses.field(default_factory=ISWRConfig)
+    forget: ForgetConfig = dataclasses.field(default_factory=ForgetConfig)
+    sb: SBConfig = dataclasses.field(default_factory=SBConfig)
+    gradmatch: GradMatchConfig = dataclasses.field(default_factory=GradMatchConfig)
+    infobatch: InfoBatchConfig = dataclasses.field(default_factory=InfoBatchConfig)
+    grad_compression: bool = False
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 0          # epochs; 0 = only on demand
+    seed: int = 0
+    eval_every: int = 1
+
+
+@dataclasses.dataclass
+class EpochStats:
+    epoch: int
+    train_loss: float
+    test_acc: float
+    hidden_fraction: float
+    fwd_samples: int
+    bwd_samples: int
+    lr: float
+    wall_time: float
+
+
+class Trainer:
+    """``loss_fn(params, batch) -> (scalar, (loss_vec, pa, pc))``;
+    ``batch`` = dataset.get(indices) arrays (+ optional 'weight')."""
+
+    def __init__(self, cfg: TrainConfig,
+                 init_params: Callable[[jax.Array], Any],
+                 loss_fn: Callable[[Any, dict], tuple],
+                 dataset, test_dataset=None,
+                 num_classes: int | None = None,
+                 feats_fn: Callable | None = None):
+        self.cfg = cfg
+        self.dataset = dataset
+        self.test_dataset = test_dataset
+        self.loss_fn = loss_fn
+        self._init_params = init_params
+        self.opt: Optimizer = make_optimizer(cfg.optimizer, **cfg.optimizer_hp)
+        self.pipeline = Pipeline(dataset.get, cfg.batch_size)
+        self.num_samples = dataset.num_samples
+        self.rng = jax.random.key(cfg.seed)
+        self.params = init_params(self.rng)
+        self.opt_state = self.opt.init(self.params)
+        self.ef_state = (init_error_feedback(self.params)
+                         if cfg.grad_compression else None)
+        self.epoch = 0
+        self.history: list[EpochStats] = []
+        self._build_sampler(num_classes)
+        self.feats_fn = feats_fn
+        self._jit_steps()
+
+    # ------------------------------------------------------------------ setup
+
+    def _build_sampler(self, num_classes):
+        c, n = self.cfg, self.num_samples
+        self.sb = None
+        if c.strategy in ("baseline",):
+            self.sampler = None
+        elif c.strategy == "kakurenbo":
+            self.sampler = KakurenboSampler(n, c.kakurenbo, c.seed)
+        elif c.strategy == "random":
+            kc = dataclasses.replace(c.kakurenbo)
+            self.sampler = KakurenboSampler(n, kc, c.seed)
+        elif c.strategy == "iswr":
+            self.sampler = ISWRSampler(n, c.iswr, c.seed)
+        elif c.strategy == "forget":
+            self.sampler = ForgetSampler(n, c.forget, c.seed)
+        elif c.strategy == "sb":
+            self.sampler = None
+            self.sb = SelectiveBackprop(c.sb, c.seed)
+        elif c.strategy == "gradmatch":
+            assert num_classes is not None
+            self.sampler = GradMatchSampler(n, num_classes, c.gradmatch, c.seed)
+        elif c.strategy == "infobatch":
+            ib = dataclasses.replace(c.infobatch, total_epochs=c.epochs)
+            self.sampler = InfoBatchSampler(n, ib, c.seed)
+        else:
+            raise ValueError(f"unknown strategy {c.strategy!r}")
+        self._shuffle_rng = np.random.default_rng(c.seed + 1)
+
+    def _jit_steps(self):
+        opt, loss_fn, compress = self.opt, self.loss_fn, self.cfg.grad_compression
+
+        def train_step(params, opt_state, ef, batch, lr):
+            (scalar, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            if compress:
+                grads, ef = compress_grads(grads, ef)
+            params, opt_state = opt.update(grads, opt_state, params, lr)
+            return params, opt_state, ef, scalar, metrics
+
+        def eval_step(params, batch):
+            _, metrics = loss_fn(params, batch)
+            return metrics
+
+        self._train_step = jax.jit(train_step, donate_argnums=(0, 1, 2))
+        self._eval_step = jax.jit(eval_step)
+
+    # ------------------------------------------------------------------ epochs
+
+    def _epoch_indices(self, epoch: int):
+        """Returns (indices, plan_or_None) honoring the strategy."""
+        c = self.cfg
+        if c.strategy in ("baseline", "sb"):
+            idx = np.arange(self.num_samples)
+            self._shuffle_rng.shuffle(idx)
+            return idx, None
+        if c.strategy in ("kakurenbo", "random"):
+            if c.strategy == "random":
+                self._randomize_losses()
+            plan = self.sampler.begin_epoch(epoch)
+            return plan.visible_indices, plan
+        if c.strategy in ("iswr", "infobatch"):
+            return self.sampler.begin_epoch(epoch), None
+        if c.strategy == "forget":
+            idx = self.sampler.begin_epoch(epoch)
+            if self.sampler.should_restart:
+                # FORGET restarts training from scratch on the pruned set.
+                self.params = self._init_params(self.rng)
+                self.opt_state = self.opt.init(self.params)
+            return idx, None
+        if c.strategy == "gradmatch":
+            if self.feats_fn is not None and epoch % c.gradmatch.interval == 0:
+                feats, labels = self._collect_feats()
+                self.sampler.maybe_reselect(epoch, feats, labels)
+            return self.sampler.begin_epoch(), None
+        raise AssertionError
+
+    def _randomize_losses(self):
+        """'random' baseline (App. C.4): importance = iid uniform."""
+        from repro.core.state import SampleState
+        import dataclasses as dc
+        n = self.num_samples
+        self.sampler.state = dc.replace(
+            self.sampler.state,
+            loss=jnp.asarray(self._shuffle_rng.random(n), jnp.float32),
+            pa=jnp.ones((n,), bool),
+            pc=jnp.ones((n,), jnp.float32),
+            seen=jnp.zeros((n,), jnp.int32))
+
+    def _collect_feats(self):
+        feats, labels = [], []
+        for idx, batch in self.pipeline.batches(np.arange(self.num_samples)):
+            p = self.feats_fn(self.params, batch)
+            feats.append(np.asarray(p))
+            labels.append(batch["labels"])
+        return np.concatenate(feats), np.concatenate(labels)
+
+    def run_epoch(self, epoch: int) -> EpochStats:
+        c = self.cfg
+        t0 = time.perf_counter()
+        indices, plan = self._epoch_indices(epoch)
+        lr_scale = plan.lr_scale if plan is not None else 1.0
+        lr = float(c.lr(epoch)) * lr_scale
+        fwd = bwd = 0
+        losses = []
+        for idx, batch in self.pipeline.batches(indices):
+            weight = None
+            if c.strategy == "sb":
+                # forward-only pass for selection, then masked backward
+                lv, _, _ = self._eval_step(self.params, batch)
+                keep = self.sb.select(np.asarray(lv))
+                weight = jnp.asarray(keep * (len(keep) / max(keep.sum(), 1.0)),
+                                     jnp.float32)
+                fwd += len(idx)
+                bwd += int(keep.sum())
+            elif c.strategy == "gradmatch":
+                weight = jnp.asarray(self.sampler.weights[idx], jnp.float32)
+                fwd += len(idx)
+                bwd += len(idx)
+            else:
+                fwd += len(idx)
+                bwd += len(idx)
+            b = dict(batch)
+            if weight is not None:
+                b["weight"] = weight
+            if c.strategy in ("iswr", "infobatch"):
+                b["weight"] = jnp.asarray(self.sampler.sample_weights(idx))
+            self.params, self.opt_state, self.ef_state, scalar, metrics = (
+                self._train_step(self.params, self.opt_state, self.ef_state,
+                                 b, lr))
+            losses.append(float(scalar))
+            if self.sampler is not None and hasattr(self.sampler, "observe"):
+                lv, pa, pc = metrics
+                self.sampler.observe(idx, lv, pa, pc, epoch)
+        # KAKURENBO step D: forward-only refresh of the hidden list.
+        if plan is not None and len(plan.hidden_indices):
+            def fwd_fn(idx):
+                return self._eval_step(self.params, self.dataset.get(idx))
+            n_ref = self.sampler.refresh_hidden(plan, fwd_fn, c.batch_size)
+            fwd += n_ref
+        acc = self.evaluate() if (self.test_dataset is not None
+                                  and epoch % c.eval_every == 0) else float("nan")
+        stats = EpochStats(
+            epoch=epoch,
+            train_loss=float(np.mean(losses)) if losses else float("nan"),
+            test_acc=acc,
+            hidden_fraction=plan.hidden_fraction if plan is not None else 0.0,
+            fwd_samples=fwd, bwd_samples=bwd, lr=lr,
+            wall_time=time.perf_counter() - t0)
+        self.history.append(stats)
+        self.epoch = epoch + 1
+        if (c.checkpoint_dir and c.checkpoint_every
+                and (epoch + 1) % c.checkpoint_every == 0):
+            self.save_checkpoint()
+        return stats
+
+    def run(self, epochs: int | None = None,
+            fail_at_epoch: int | None = None) -> list[EpochStats]:
+        """Run remaining epochs; ``fail_at_epoch`` injects a simulated crash
+        (raises) for the fault-tolerance tests."""
+        total = epochs or self.cfg.epochs
+        while self.epoch < total:
+            if fail_at_epoch is not None and self.epoch == fail_at_epoch:
+                raise RuntimeError(f"injected failure at epoch {self.epoch}")
+            self.run_epoch(self.epoch)
+        return self.history
+
+    # ------------------------------------------------------------------ eval
+
+    def evaluate(self) -> float:
+        ds = self.test_dataset
+        correct = total = 0
+        for idx, batch in Pipeline(ds.get, self.cfg.batch_size).batches(
+                np.arange(ds.num_samples)):
+            _, pa, _ = self._eval_step(self.params, batch)
+            correct += int(np.sum(np.asarray(pa)))
+            total += len(idx)
+        return correct / max(total, 1)
+
+    # ------------------------------------------------------------------ fault tolerance
+
+    def _ckpt_tree(self):
+        tree = {"params": self.params, "opt_state": self.opt_state}
+        if self.sampler is not None and hasattr(self.sampler, "state"):
+            tree["sampler_state"] = self.sampler.state
+        return tree
+
+    def save_checkpoint(self) -> str | None:
+        if not self.cfg.checkpoint_dir:
+            return None
+        # Host RNG states (epoch shuffles / with-replacement draws) must be
+        # checkpointed too — without them a restart re-shuffles differently
+        # and the resumed trajectory silently diverges from the uninterrupted
+        # one (caught by test_checkpoint_restart_bit_exact).
+        meta = {"epoch": self.epoch,
+                "shuffle_rng": self._shuffle_rng.bit_generator.state}
+        if self.sampler is not None and hasattr(self.sampler, "_rng"):
+            meta["sampler_rng"] = self.sampler._rng.bit_generator.state
+        if self.sb is not None:
+            meta["sb_rng"] = self.sb._rng.bit_generator.state
+        return ckpt.save(self.cfg.checkpoint_dir, self.epoch,
+                         self._ckpt_tree(), metadata=meta)
+
+    def restore_latest(self) -> bool:
+        if not self.cfg.checkpoint_dir:
+            return False
+        res = ckpt.restore_latest(self.cfg.checkpoint_dir, self._ckpt_tree())
+        if res is None:
+            return False
+        tree, meta, step = res
+        self.params = tree["params"]
+        self.opt_state = tree["opt_state"]
+        if "sampler_state" in tree and self.sampler is not None:
+            self.sampler.state = jax.tree.map(jnp.asarray,
+                                              tree["sampler_state"])
+        self.epoch = meta["epoch"]
+        if "shuffle_rng" in meta:
+            self._shuffle_rng.bit_generator.state = meta["shuffle_rng"]
+        if "sampler_rng" in meta and hasattr(self.sampler, "_rng"):
+            self.sampler._rng.bit_generator.state = meta["sampler_rng"]
+        if "sb_rng" in meta and self.sb is not None:
+            self.sb._rng.bit_generator.state = meta["sb_rng"]
+        return True

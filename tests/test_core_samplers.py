@@ -1,0 +1,120 @@
+"""Unit tests for the KAKURENBO orchestrator and the baseline samplers."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ForgetConfig, ForgetSampler, ISWRSampler, KakurenboConfig,
+    KakurenboSampler, SBConfig, SelectiveBackprop, GradMatchConfig,
+    GradMatchSampler,
+)
+
+
+def _observe_all(sampler, n, losses, pa, pc, epoch):
+    sampler.observe(np.arange(n), jnp.asarray(losses, jnp.float32),
+                    jnp.asarray(pa), jnp.asarray(pc, jnp.float32), epoch)
+
+
+def test_kakurenbo_epoch_cycle():
+    n = 200
+    ks = KakurenboSampler(n, KakurenboConfig(max_fraction=0.3,
+                                             fraction_milestones=(0, 5, 8, 10)))
+    plan0 = ks.begin_epoch(0)
+    assert len(plan0.hidden_indices) == 0          # nothing observed yet
+    losses = np.linspace(0, 1, n)
+    _observe_all(ks, n, losses, np.ones(n, bool), np.full(n, 0.9), 0)
+    plan1 = ks.begin_epoch(1)
+    assert 0 < len(plan1.hidden_indices) <= int(0.3 * n)
+    # hidden are the lowest-loss samples
+    assert losses[plan1.hidden_indices].max() <= losses[
+        plan1.visible_indices].min() + 1e-9
+    # visible + hidden partition the dataset
+    assert len(plan1.visible_indices) + len(plan1.hidden_indices) == n
+    np.testing.assert_allclose(plan1.lr_scale,
+                               1.0 / (1.0 - plan1.hidden_fraction), rtol=1e-6)
+
+
+def test_kakurenbo_moveback_blocks_low_confidence():
+    n = 100
+    ks = KakurenboSampler(n, KakurenboConfig(max_fraction=0.5, tau=0.7))
+    losses = np.linspace(0, 1, n)
+    pc = np.where(np.arange(n) % 2 == 0, 0.9, 0.1)  # odd samples low-PC
+    _observe_all(ks, n, losses, np.ones(n, bool), pc, 0)
+    plan = ks.begin_epoch(1)
+    assert np.all(plan.hidden_indices % 2 == 0)
+
+
+def test_kakurenbo_component_toggles():
+    n = 100
+    cfg = KakurenboConfig(max_fraction=0.4, moveback=False, adjust_lr=False,
+                          reduce_fraction=False)
+    ks = KakurenboSampler(n, cfg)
+    losses = np.linspace(0, 1, n)
+    _observe_all(ks, n, losses, np.zeros(n, bool), np.zeros(n), 0)
+    plan = ks.begin_epoch(1)
+    # without move-back, low-loss samples are hidden even if never confident
+    assert len(plan.hidden_indices) == 40
+    assert plan.lr_scale == 1.0
+
+
+def test_droptop_hides_highest_loss():
+    n = 100
+    ks = KakurenboSampler(n, KakurenboConfig(max_fraction=0.2,
+                                             drop_top_fraction=0.05))
+    losses = np.linspace(0, 1, n)
+    _observe_all(ks, n, losses, np.ones(n, bool), np.full(n, 0.99), 0)
+    plan = ks.begin_epoch(1)
+    hidden = set(plan.hidden_indices.tolist())
+    assert {95, 96, 97, 98, 99} <= hidden  # DropTop tail
+
+
+def test_iswr_prefers_high_loss():
+    n = 1000
+    s = ISWRSampler(n, seed=0)
+    losses = np.zeros(n)
+    losses[:100] = 10.0  # 100 high-loss samples
+    _observe_all(s, n, losses, np.ones(n, bool), np.ones(n), 0)
+    idx = s.begin_epoch(1)
+    assert len(idx) == n  # with replacement, same epoch size
+    frac_high = np.mean(idx < 100)
+    assert frac_high > 0.5  # 10% of samples get >50% of draws
+
+
+def test_forget_prunes_unforgettable_and_restarts():
+    n = 100
+    s = ForgetSampler(n, ForgetConfig(fraction=0.3, warmup_epochs=2))
+    # samples 0..49: always correct (unforgettable); 50..99 flip each epoch
+    for e in range(2):
+        pa = np.ones(n, bool)
+        pa[50:] = e % 2 == 0
+        _observe_all(s, n, np.ones(n), pa, np.ones(n), e)
+        s.begin_epoch(e)
+    idx = s.begin_epoch(2)
+    assert s.should_restart
+    assert len(idx) == 70
+    pruned = set(range(n)) - set(idx.tolist())
+    assert all(i < 50 for i in pruned)  # only unforgettable samples pruned
+
+
+def test_selective_backprop_keeps_high_loss():
+    sb = SelectiveBackprop(SBConfig(beta=1.0), seed=0)
+    r = np.random.default_rng(0)
+    for _ in range(10):  # warm the history
+        sb.select(r.random(64).astype(np.float32))
+    low = sb.select(np.full(64, 0.001, np.float32)).mean()
+    high = sb.select(np.full(64, 0.999, np.float32)).mean()
+    assert high > low
+
+
+def test_gradmatch_selects_subset_with_weights():
+    n, c = 120, 3
+    r = np.random.default_rng(0)
+    labels = np.arange(n) % c
+    feats = r.normal(size=(n, 8)).astype(np.float32)
+    gm = GradMatchSampler(n, c, GradMatchConfig(fraction=0.5, interval=1))
+    assert gm.maybe_reselect(0, feats, labels)
+    assert len(gm.subset) <= int(0.5 * n) + c
+    assert np.all(gm.weights >= 0)
+    idx = gm.begin_epoch()
+    assert set(idx.tolist()) == set(gm.subset.tolist())

@@ -1,0 +1,121 @@
+"""Hypothesis property tests on KAKURENBO's selection invariants."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FractionSchedule, init_sample_state, kakurenbo_lr, scatter_observations,
+    select_hidden,
+)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _observed_state(losses, pa, pc):
+    n = len(losses)
+    s = init_sample_state(n)
+    return scatter_observations(
+        s, jnp.arange(n), jnp.asarray(losses, jnp.float32),
+        jnp.asarray(pa), jnp.asarray(pc, jnp.float32), 0)
+
+
+@st.composite
+def sample_states(draw):
+    n = draw(st.integers(8, 200))
+    r = np.random.default_rng(draw(st.integers(0, 2**31)))
+    losses = r.exponential(1.0, n).astype(np.float32)
+    pa = r.random(n) < draw(st.floats(0.0, 1.0))
+    pc = r.random(n).astype(np.float32)
+    return losses, pa, pc
+
+
+@given(sample_states(), st.floats(0.0, 0.9),
+       st.sampled_from(["sort", "histogram"]))
+def test_hidden_count_bounded(state_args, frac, method):
+    """|hidden| <= F*N + slack; hidden implies confident-correct; never-seen
+    samples are never hidden."""
+    losses, pa, pc = state_args
+    n = len(losses)
+    s = _observed_state(losses, pa, pc)
+    hidden = np.asarray(select_hidden(s, frac, method=method, tau=0.7))
+    limit = int(np.floor(frac * n))
+    slack = 0 if method == "sort" else max(4, n // 64)  # histogram bin slack
+    assert hidden.sum() <= limit + slack
+    # move-back rule: hidden => PA and PC >= tau
+    assert np.all(pa[hidden])
+    assert np.all(pc[hidden] >= 0.7)
+
+
+@given(sample_states(), st.floats(0.05, 0.9))
+def test_sort_hides_lowest_losses(state_args, frac):
+    """Among confident-correct samples, the hidden ones have losses <= every
+    visible confident-correct sample outside the candidate set."""
+    losses, pa, pc = state_args
+    pa = np.ones_like(pa)  # all eligible -> pure loss ranking
+    pc = np.ones_like(pc)
+    s = _observed_state(losses, pa, pc)
+    hidden = np.asarray(select_hidden(s, frac, method="sort"))
+    k = int(np.floor(frac * len(losses)))
+    if k == 0:
+        assert hidden.sum() == 0
+        return
+    assert hidden.sum() == k
+    thresh = np.sort(losses)[k - 1]
+    assert np.all(losses[hidden] <= thresh + 1e-6)
+
+
+@given(sample_states(), st.floats(0.05, 0.9))
+def test_histogram_approximates_sort(state_args, frac):
+    losses, pa, pc = state_args
+    pa = np.ones_like(pa)
+    pc = np.ones_like(pc)
+    s = _observed_state(losses, pa, pc)
+    h_sort = np.asarray(select_hidden(s, frac, method="sort"))
+    h_hist = np.asarray(select_hidden(s, frac, method="histogram"))
+    n = len(losses)
+    # counts agree within one histogram bin's population
+    assert abs(int(h_sort.sum()) - int(h_hist.sum())) <= max(4, n // 16)
+
+
+@given(st.integers(0, 300))
+def test_fraction_schedule_monotone_nonincreasing(epoch):
+    fs = FractionSchedule(0.3, (1.0, 0.8, 0.6, 0.4), (0, 30, 60, 80))
+    f_now = float(fs(epoch))
+    f_next = float(fs(epoch + 1))
+    assert 0.0 <= f_next <= f_now <= 0.3 + 1e-6
+
+
+@given(st.floats(0.0, 0.9), st.floats(1e-4, 1.0))
+def test_lr_adjustment_equation8(frac, base):
+    lr = float(kakurenbo_lr(jnp.float32(base), frac))
+    assert lr >= base * (1 - 1e-6)  # f32 rounding slack
+    np.testing.assert_allclose(lr, base / (1 - min(frac, 0.95)), rtol=1e-5)
+
+
+@given(sample_states())
+def test_never_seen_never_hidden(state_args):
+    losses, pa, pc = state_args
+    n = len(losses)
+    s = init_sample_state(n)  # nothing observed
+    hidden = np.asarray(select_hidden(s, 0.5, method="sort"))
+    assert hidden.sum() == 0
+    hidden_h = np.asarray(select_hidden(s, 0.5, method="histogram"))
+    assert hidden_h.sum() == 0
+
+
+@given(sample_states(), st.integers(0, 2**31))
+def test_selection_permutation_equivariant(state_args, seed):
+    """Permuting samples permutes the hidden mask identically (no positional
+    bias in selection)."""
+    losses, pa, pc = state_args
+    # make losses unique so ranking is deterministic under permutation
+    losses = losses + np.arange(len(losses), dtype=np.float32) * 1e-6
+    perm = np.random.default_rng(seed).permutation(len(losses))
+    s1 = _observed_state(losses, pa, pc)
+    s2 = _observed_state(losses[perm], pa[perm], pc[perm])
+    h1 = np.asarray(select_hidden(s1, 0.4, method="sort"))
+    h2 = np.asarray(select_hidden(s2, 0.4, method="sort"))
+    assert np.array_equal(h1[perm], h2)

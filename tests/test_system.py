@@ -1,0 +1,95 @@
+"""End-to-end behaviour tests for the KAKURENBO system."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import KakurenboConfig, LRSchedule
+from repro.data import SyntheticClassification, SyntheticLM
+from repro.models import cnn, build_model
+from repro.configs.registry import get_arch
+from repro.train import Trainer, TrainConfig
+
+CFG_MODEL = cnn.CNNConfig(image_size=8, widths=(8, 16), hidden=32)
+
+
+def _cnn_fns():
+    def init_params(rng):
+        return cnn.init(rng, CFG_MODEL)
+
+    def loss_fn(params, batch):
+        logits = cnn.forward(params, CFG_MODEL, batch["images"])
+        loss, pa, pc = cnn.per_sample_metrics(logits, batch["labels"])
+        w = batch.get("weight")
+        scalar = jnp.mean(loss * w) if w is not None else jnp.mean(loss)
+        return scalar, (loss, pa, pc)
+
+    return init_params, loss_fn
+
+
+def test_kakurenbo_reduces_work_and_learns():
+    """KAKURENBO trains to a sane accuracy while doing measurably less
+    backward work than the baseline — the paper's core claim in miniature."""
+    ds = SyntheticClassification(num_samples=512, image_size=8, seed=0)
+    test = ds.test_split(256)
+    init_params, loss_fn = _cnn_fns()
+    res = {}
+    for strat in ("baseline", "kakurenbo"):
+        tc = TrainConfig(
+            epochs=10, batch_size=64, strategy=strat,
+            lr=LRSchedule(0.05, "cosine", 10, 1),
+            kakurenbo=KakurenboConfig(max_fraction=0.3,
+                                      fraction_milestones=(0, 4, 7, 9)))
+        tr = Trainer(tc, init_params, loss_fn, ds, test)
+        hist = tr.run()
+        res[strat] = (hist[-1].test_acc, sum(h.bwd_samples for h in hist))
+    acc_b, work_b = res["baseline"]
+    acc_k, work_k = res["kakurenbo"]
+    assert work_k < work_b                      # strictly less backward work
+    assert acc_k > acc_b - 0.15                 # accuracy in the same regime
+    assert acc_k > 0.3                          # actually learned
+
+
+def test_kakurenbo_hiding_follows_difficulty():
+    """Easy (low-difficulty) samples get hidden more than hard ones."""
+    ds = SyntheticClassification(num_samples=512, image_size=8, seed=0)
+    init_params, loss_fn = _cnn_fns()
+    tc = TrainConfig(epochs=8, batch_size=64, strategy="kakurenbo",
+                     lr=LRSchedule(0.05, "cosine", 8, 1),
+                     kakurenbo=KakurenboConfig(max_fraction=0.4,
+                                               fraction_milestones=(0, 8, 9, 10)))
+    tr = Trainer(tc, init_params, loss_fn, ds, None)
+    hidden_count = np.zeros(512)
+    for e in range(8):
+        stats = tr.run_epoch(e)
+        hidden_count[np.asarray(tr.sampler.state.hidden)] += 1
+    easy = ds.difficulty < 0.3
+    if hidden_count.sum() > 0:
+        assert hidden_count[easy].mean() >= hidden_count[~easy].mean()
+
+
+def test_lm_training_with_kakurenbo():
+    """Sequence-level hiding on a reduced LM arch (smollm family)."""
+    cfg = get_arch("smollm-135m").reduced()
+    model = build_model(cfg)
+    # unigram-table source, small effective vocab: learnable in a few epochs
+    ds = SyntheticLM(num_samples=128, seq_len=32, vocab_size=48, order=1,
+                     easy_fraction=0.7, seed=0)
+
+    def init_params(rng):
+        return model.init(rng)
+
+    def loss_fn(params, batch):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        return model.loss_and_metrics(params, b)
+
+    tc = TrainConfig(epochs=8, batch_size=32, strategy="kakurenbo",
+                     optimizer="adamw", optimizer_hp={},
+                     lr=LRSchedule(1e-2, "cosine", 8, 1),
+                     kakurenbo=KakurenboConfig(max_fraction=0.3,
+                                               fraction_milestones=(0, 4, 6, 8)))
+    tr = Trainer(tc, init_params, loss_fn, ds, None)
+    hist = tr.run()
+    assert hist[-1].train_loss < hist[0].train_loss
+    assert any(h.hidden_fraction > 0 for h in hist)

@@ -1,0 +1,177 @@
+"""Integration: trainer + checkpoint/restart, failure injection, elasticity,
+straggler mitigation, optimizers, gradient compression."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import KakurenboConfig, LRSchedule
+from repro.data import SyntheticClassification, worker_slice
+from repro.models import cnn
+from repro.optim import make_optimizer
+from repro.train import Trainer, TrainConfig
+from repro.train.fault import StragglerMonitor, rescale_plan, run_with_restarts
+
+CFG_MODEL = cnn.CNNConfig(image_size=8, widths=(8,), hidden=16)
+
+
+def _mk_trainer(tmp_path, strategy="kakurenbo", epochs=4, ds=None, seed=0):
+    ds = ds or SyntheticClassification(num_samples=256, image_size=8, seed=0)
+
+    def init_params(rng):
+        return cnn.init(rng, CFG_MODEL)
+
+    def loss_fn(params, batch):
+        logits = cnn.forward(params, CFG_MODEL, batch["images"])
+        loss, pa, pc = cnn.per_sample_metrics(logits, batch["labels"])
+        w = batch.get("weight")
+        scalar = jnp.mean(loss * w) if w is not None else jnp.mean(loss)
+        return scalar, (loss, pa, pc)
+
+    tc = TrainConfig(
+        epochs=epochs, batch_size=64, strategy=strategy,
+        lr=LRSchedule(0.05, "cosine", epochs, 1),
+        kakurenbo=KakurenboConfig(max_fraction=0.3,
+                                  fraction_milestones=(0, 2, 3, 4)),
+        checkpoint_dir=str(tmp_path / "ckpt"), checkpoint_every=1, seed=seed)
+    return Trainer(tc, init_params, loss_fn, ds, ds.test_split(64))
+
+
+def test_checkpoint_restart_bit_exact(tmp_path):
+    """Crash at epoch 2, restart from checkpoint -> same final params as an
+    uninterrupted run (bit-exact, incl. KAKURENBO sampler state)."""
+    tr_ref = _mk_trainer(tmp_path / "ref")
+    tr_ref.run(4)
+
+    made = []
+
+    def make():
+        t = _mk_trainer(tmp_path / "crash")
+        made.append(t)
+        return t
+
+    with pytest.raises(RuntimeError):
+        make().run(4, fail_at_epoch=2)
+    tr2, restarts = run_with_restarts(make, 4)
+    leaves_ref = jax.tree.leaves(tr_ref.params)
+    leaves_re = jax.tree.leaves(tr2.params)
+    for a, b in zip(leaves_ref, leaves_re):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # sampler state also restored + advanced identically
+    np.testing.assert_array_equal(np.asarray(tr_ref.sampler.state.loss),
+                                  np.asarray(tr2.sampler.state.loss))
+
+
+def test_checkpoint_integrity_detects_corruption(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 3))}}
+    path = ckpt.save(str(tmp_path), 1, tree)
+    # corrupt one leaf
+    import numpy as _np
+    f = path + "/leaf_00000.npy"
+    arr = _np.load(f)
+    arr[0] = 999.0
+    _np.save(f, arr)
+    with pytest.raises(IOError):
+        ckpt.restore(str(tmp_path), 1, tree)
+
+
+def test_checkpoint_uncommitted_ignored(tmp_path):
+    tree = {"a": jnp.arange(4.0)}
+    ckpt.save(str(tmp_path), 1, tree)
+    # a partially-written step dir without COMMITTED must be invisible
+    import os
+    os.makedirs(str(tmp_path / "step_0000000002"))
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_async_checkpoint(tmp_path):
+    tree = {"a": jnp.arange(16.0)}
+    t = ckpt.save_async(str(tmp_path), 3, tree)
+    t.join()
+    restored, _ = ckpt.restore(str(tmp_path), 3, tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_worker_slice_partitions_epoch():
+    idx = np.arange(1000)
+    np.random.default_rng(0).shuffle(idx)
+    views = [worker_slice(idx, 4, r, 8) for r in range(4)]
+    allv = np.concatenate(views)
+    assert len(allv) == (1000 // 32) * 32
+    assert len(np.unique(allv)) == len(allv)  # disjoint
+
+
+def test_elastic_rescale_covers_same_samples():
+    """Rescaling 4 -> 8 workers re-partitions the same epoch permutation."""
+    idx = np.arange(512)
+    p4 = rescale_plan(idx, 4, 16)
+    p8 = rescale_plan(idx, 8, 8)
+    s4 = set(np.concatenate(p4.per_worker).tolist())
+    s8 = set(np.concatenate(p8.per_worker).tolist())
+    assert s4 == s8 == set(range(512))
+
+
+def test_straggler_rebalance():
+    mon = StragglerMonitor(4)
+    for _ in range(5):
+        for r, t in enumerate([1.0, 1.0, 1.0, 3.0]):
+            mon.record(r, t)
+    assert list(mon.stragglers()) == [False, False, False, True]
+    per_worker = [np.arange(i * 100, (i + 1) * 100) for i in range(4)]
+    out = mon.rebalance(per_worker, shed_fraction=0.25)
+    assert len(out[3]) == 75
+    assert sum(len(w) for w in out) == 400
+
+
+@pytest.mark.parametrize("name,hp", [
+    ("sgd", {"momentum": 0.9, "nesterov": True}),
+    ("adamw", {}),
+    ("rmsprop", {}),
+    ("adafactor", {}),
+])
+def test_optimizers_reduce_quadratic(name, hp):
+    """Every optimizer minimizes a quadratic."""
+    opt = make_optimizer(name, **hp)
+    params = {"w": jnp.asarray([5.0, -3.0]), "b": jnp.asarray([[1.0, 2.0],
+                                                               [3.0, 4.0]])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.float32(0.05))
+    assert float(loss(params)) < 0.5 * l0
+
+
+def test_gradient_compression_error_feedback():
+    from repro.dist.compression import compress_grads, init_error_feedback
+    r = np.random.default_rng(0)
+    g = {"w": jnp.asarray(r.normal(size=(64,)), jnp.float32)}
+    ef = init_error_feedback(g)
+    # accumulated compressed gradients track the true sum (error feedback)
+    acc_true = np.zeros(64)
+    acc_comp = np.zeros(64)
+    for _ in range(50):
+        gi = {"w": jnp.asarray(r.normal(size=(64,)), jnp.float32)}
+        cg, ef = compress_grads(gi, ef)
+        acc_true += np.asarray(gi["w"])
+        acc_comp += np.asarray(cg["w"])
+    # residual stays bounded (= current error feedback, one-step quantization)
+    assert np.max(np.abs(acc_true - acc_comp)) < 0.2
+
+
+def test_grad_compression_training_converges(tmp_path):
+    ds = SyntheticClassification(num_samples=128, image_size=8, seed=0)
+    tr = _mk_trainer(tmp_path, strategy="baseline", epochs=3, ds=ds)
+    tr.cfg = dataclasses.replace(tr.cfg, grad_compression=True)
+    from repro.dist.compression import init_error_feedback
+    tr.ef_state = init_error_feedback(tr.params)
+    tr._jit_steps()
+    hist = tr.run(3)
+    assert hist[-1].train_loss < hist[0].train_loss
