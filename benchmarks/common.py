@@ -11,7 +11,7 @@ import time
 
 import jax.numpy as jnp
 
-from repro.core import KakurenboConfig, LRSchedule
+from repro.core import KakurenboConfig, LRSchedule, make_strategy
 from repro.data import SyntheticClassification
 from repro.models import cnn
 from repro.train import Trainer, TrainConfig
@@ -66,9 +66,16 @@ def run_strategy(strategy: str, *, epochs: int = EPOCHS, seed: int = 0,
         # the paper's 20-epoch warmup maps to 1/4 of our reduced schedule.
         forget=ForgetConfig(fraction=0.3, warmup_epochs=max(epochs // 4, 2)),
         seed=seed, **cfg_kw)
-    tr = Trainer(tc, init_params, loss_fn, ds, test,
-                 num_classes=MODEL_CFG.num_classes,
-                 feats_fn=feats_fn if strategy == "gradmatch" else None)
+    # Resolve the strategy through the registry: benchmark rows are exactly
+    # the registered names, so a new @register_strategy class shows up in
+    # every table without touching the harness.
+    strat = make_strategy(strategy, ds.num_samples, cfg=tc, seed=seed,
+                          num_classes=MODEL_CFG.num_classes,
+                          total_epochs=epochs)
+    # feats_fn is lazy: only strategies whose prepare() asks for features
+    # (Grad-Match) ever invoke it, so it is safe to wire up unconditionally.
+    tr = Trainer(tc, init_params, loss_fn, ds, test, strategy=strat,
+                 feats_fn=feats_fn)
     t0 = time.perf_counter()
     hist = tr.run()
     wall = time.perf_counter() - t0

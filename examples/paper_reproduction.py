@@ -1,26 +1,52 @@
 """Paper reproduction driver: Tables 2/5/6 + Figs 2/4 in one run.
 
     PYTHONPATH=src python examples/paper_reproduction.py [--quick]
+    PYTHONPATH=src python examples/paper_reproduction.py --list-strategies
 
 Delegates to the benchmark modules (one per paper table/figure) and writes
-results/paper_reproduction.csv.
+results/paper_reproduction.csv.  Every table row is a registered
+``SampleStrategy`` name — ``--list-strategies`` prints the registry.
 """
 import argparse
 import contextlib
 import io
 import os
+import sys
+
+# Allow `python examples/paper_reproduction.py` from the repo root: the
+# interpreter puts examples/ on sys.path, not the root that holds
+# benchmarks/ nor src/ that holds repro/.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.core import STRATEGIES, available_strategies, make_strategy
 
 from benchmarks import (fig2_speedup, fig4_fraction, selection_overhead,
                         table2_accuracy, table3_gradmatch, table5_tau,
                         table6_ablation)
 
 
+def list_strategies() -> None:
+    for name in available_strategies():
+        cls = STRATEGIES[name]
+        cfg = cls.config_cls.__name__ if cls.config_cls else "-"
+        # Smoke-build each one so the listing doubles as a registry check.
+        make_strategy(name, 8, seed=0)
+        print(f"{name:>10}  {cls.__name__:<20} config={cfg}")
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--quick", action="store_true",
                    help="only Table 2 + Fig. 4 (fast)")
+    p.add_argument("--list-strategies", action="store_true",
+                   help="print the sample-strategy registry and exit")
     p.add_argument("--out", default="results/paper_reproduction.csv")
     args = p.parse_args()
+    if args.list_strategies:
+        list_strategies()
+        return
     sections = ([table2_accuracy, fig4_fraction] if args.quick else
                 [table2_accuracy, table3_gradmatch, table5_tau,
                  table6_ablation, fig2_speedup, fig4_fraction,

@@ -8,7 +8,7 @@ and backward-work comparison (the paper's core claim in one screen).
 """
 import jax.numpy as jnp
 
-from repro.core import KakurenboConfig, LRSchedule
+from repro.core import KakurenboConfig, LRSchedule, make_strategy
 from repro.data import SyntheticClassification
 from repro.models import cnn
 from repro.train import Trainer, TrainConfig
@@ -29,13 +29,16 @@ def main() -> None:
     ds = SyntheticClassification(num_samples=1024, seed=0)
     test = ds.test_split(512)
     results = {}
+    kc = KakurenboConfig(max_fraction=0.3, fraction_milestones=(0, 4, 6, 9))
     for strategy in ("baseline", "kakurenbo"):
         tc = TrainConfig(
             epochs=EPOCHS, batch_size=128, strategy=strategy,
-            lr=LRSchedule(0.05, "cosine", EPOCHS, 1),
-            kakurenbo=KakurenboConfig(max_fraction=0.3,
-                                      fraction_milestones=(0, 4, 6, 9)))
-        tr = Trainer(tc, lambda rng: cnn.init(rng, MODEL), loss_fn, ds, test)
+            lr=LRSchedule(0.05, "cosine", EPOCHS, 1), kakurenbo=kc)
+        # Strategies come from the registry; any @register_strategy name
+        # (iswr, sb, infobatch, ...) drops in here unchanged.
+        strat = make_strategy(strategy, ds.num_samples, cfg=kc)
+        tr = Trainer(tc, lambda rng: cnn.init(rng, MODEL), loss_fn, ds, test,
+                     strategy=strat)
         hist = tr.run()
         results[strategy] = (hist[-1].test_acc,
                              sum(h.bwd_samples for h in hist),

@@ -1,4 +1,9 @@
-"""KAKURENBO core: adaptive sample hiding + the paper's baselines."""
+"""KAKURENBO core: adaptive sample hiding + the paper's baselines.
+
+All selection methods implement the unified ``SampleStrategy`` protocol and
+are discoverable through the registry (``make_strategy``/``STRATEGIES``);
+the legacy sampler classes remain exported for direct, low-level use.
+"""
 from repro.core.state import (  # noqa: F401
     SampleState, init_sample_state, scatter_observations, with_hidden,
 )
@@ -9,11 +14,22 @@ from repro.core.selection import (  # noqa: F401
 from repro.core.schedule import (  # noqa: F401
     FractionSchedule, LRSchedule, kakurenbo_lr, linear_scaling_rule,
 )
-from repro.core.kakurenbo import (  # noqa: F401
-    KakurenboConfig, KakurenboSampler, EpochPlan,
+from repro.core.strategy import (  # noqa: F401
+    EpochPlan, SampleStrategy, STRATEGIES, available_strategies,
+    make_strategy, register_strategy,
 )
-from repro.core.iswr import ISWRConfig, ISWRSampler  # noqa: F401
-from repro.core.forget import ForgetConfig, ForgetSampler  # noqa: F401
-from repro.core.selective_backprop import SBConfig, SelectiveBackprop  # noqa: F401
-from repro.core.gradmatch import GradMatchConfig, GradMatchSampler  # noqa: F401
-from repro.core.infobatch import InfoBatchConfig, InfoBatchSampler  # noqa: F401
+from repro.core.kakurenbo import (  # noqa: F401
+    KakurenboConfig, KakurenboSampler, KakurenboStrategy,
+)
+from repro.core.baseline import BaselineStrategy, RandomStrategy  # noqa: F401
+from repro.core.iswr import ISWRConfig, ISWRSampler, ISWRStrategy  # noqa: F401
+from repro.core.forget import ForgetConfig, ForgetSampler, ForgetStrategy  # noqa: F401
+from repro.core.selective_backprop import (  # noqa: F401
+    SBConfig, SBStrategy, SelectiveBackprop,
+)
+from repro.core.gradmatch import (  # noqa: F401
+    GradMatchConfig, GradMatchSampler, GradMatchStrategy,
+)
+from repro.core.infobatch import (  # noqa: F401
+    InfoBatchConfig, InfoBatchSampler, InfoBatchStrategy,
+)

@@ -1,0 +1,92 @@
+"""Trainer-special-case-free baseline strategies.
+
+``baseline`` — uniform shuffle over the full dataset, the control every
+paper table is measured against.  ``random`` — KAKURENBO's machinery driven
+by iid-uniform importance (paper App. C.4): hides the same *fraction* as
+KAKURENBO but picks the samples at random, isolating how much of the win
+comes from loss-ranked selection rather than from merely training on fewer
+samples.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kakurenbo import KakurenboConfig, KakurenboSampler
+from repro.core.strategy import (
+    EpochPlan, SampleStrategy, register_strategy, rng_state, set_rng_state,
+)
+
+
+@register_strategy("baseline")
+class BaselineStrategy(SampleStrategy):
+    """Uniform without-replacement epoch over every sample."""
+
+    def __init__(self, num_samples: int, config=None, seed: int = 0):
+        super().__init__(num_samples, config, seed)
+        self._rng = np.random.default_rng(seed + 1)
+
+    def plan(self, epoch: int) -> EpochPlan:
+        idx = np.arange(self.num_samples)
+        self._rng.shuffle(idx)
+        return EpochPlan(epoch=epoch, visible_indices=idx)
+
+    def state_dict(self) -> dict:
+        return {"arrays": {}, "host": {"rng": rng_state(self._rng)}}
+
+    def load_state_dict(self, state: dict) -> None:
+        set_rng_state(self._rng, state["host"]["rng"])
+
+
+@register_strategy("random")
+class RandomStrategy(SampleStrategy):
+    """Random hiding (App. C.4): KAKURENBO with iid-uniform importance."""
+
+    config_cls, config_field = KakurenboConfig, "kakurenbo"
+
+    def __init__(self, num_samples: int, config: KakurenboConfig | None = None,
+                 seed: int = 0):
+        super().__init__(num_samples, config, seed)
+        self._inner = KakurenboSampler(
+            num_samples, dataclasses.replace(config) if config else None, seed)
+        self._rng = np.random.default_rng(seed + 1)
+
+    @property
+    def state(self):
+        return self._inner.state
+
+    def _randomize_importance(self) -> None:
+        """Overwrite the lagging state with iid-uniform 'losses' that are
+        always move-back-eligible, so hiding is a pure coin flip."""
+        n = self.num_samples
+        self._inner.state = dataclasses.replace(
+            self._inner.state,
+            loss=jnp.asarray(self._rng.random(n), jnp.float32),
+            pa=jnp.ones((n,), bool),
+            pc=jnp.ones((n,), jnp.float32),
+            seen=jnp.zeros((n,), jnp.int32))
+
+    def plan(self, epoch: int) -> EpochPlan:
+        self._randomize_importance()
+        return self._inner.begin_epoch(epoch)
+
+    def observe(self, indices, loss, pa, pc, epoch: int) -> None:
+        self._inner.observe(indices, loss, pa, pc, epoch)
+
+    def on_epoch_end(self, plan: EpochPlan, eval_forward, batch_size: int) -> int:
+        # Same refresh cost as KAKURENBO so the work accounting is an
+        # apples-to-apples comparison (App. C.4).
+        return self._inner.refresh_hidden(plan, eval_forward, batch_size)
+
+    def state_dict(self) -> dict:
+        return {"arrays": {"state": self._inner.state},
+                "host": {"rng": rng_state(self._rng),
+                         "inner_rng": rng_state(self._inner._rng)}}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._inner.state = jax.tree.map(jnp.asarray, state["arrays"]["state"])
+        set_rng_state(self._rng, state["host"]["rng"])
+        set_rng_state(self._inner._rng, state["host"]["inner_rng"])

@@ -17,6 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.state import SampleState, init_sample_state, scatter_observations
+from repro.core.strategy import (
+    EpochPlan, SampleStrategy, register_strategy, rng_state, set_rng_state,
+)
 
 
 @dataclasses.dataclass
@@ -69,3 +72,39 @@ class ForgetSampler:
     def batches(self, epoch_indices: np.ndarray, batch_size: int) -> Iterator[np.ndarray]:
         for start in range(0, len(epoch_indices) - batch_size + 1, batch_size):
             yield epoch_indices[start : start + batch_size]
+
+
+@register_strategy("forget")
+class ForgetStrategy(SampleStrategy):
+    """Warmup -> prune-unforgettables -> restart, as one plan() flag."""
+
+    config_cls, config_field = ForgetConfig, "forget"
+
+    def __init__(self, num_samples: int, config: ForgetConfig | None = None,
+                 seed: int = 0):
+        super().__init__(num_samples, config, seed)
+        self._inner = ForgetSampler(num_samples, config, seed)
+
+    @property
+    def state(self) -> SampleState:
+        return self._inner.state
+
+    def plan(self, epoch: int) -> EpochPlan:
+        idx = self._inner.begin_epoch(epoch)
+        return EpochPlan(epoch=epoch, visible_indices=idx,
+                         reinit_model=self._inner.should_restart)
+
+    def observe(self, indices, loss, pa, pc, epoch: int) -> None:
+        self._inner.observe(indices, loss, pa, pc, epoch)
+
+    def state_dict(self) -> dict:
+        return {"arrays": {"state": self._inner.state,
+                           "pruned": self._inner.pruned_mask},
+                "host": {"rng": rng_state(self._inner._rng),
+                         "restarted": bool(self._inner.restarted)}}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._inner.state = jax.tree.map(jnp.asarray, state["arrays"]["state"])
+        self._inner.pruned_mask = np.asarray(state["arrays"]["pruned"], bool)
+        self._inner.restarted = bool(state["host"]["restarted"])
+        set_rng_state(self._inner._rng, state["host"]["rng"])

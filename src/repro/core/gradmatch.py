@@ -18,6 +18,11 @@ from typing import Iterator
 
 import numpy as np
 
+from repro.core.strategy import (
+    EpochPlan, FeatsFn, SampleStrategy, register_strategy, rng_state,
+    set_rng_state,
+)
+
 
 @dataclasses.dataclass
 class GradMatchConfig:
@@ -94,3 +99,46 @@ class GradMatchSampler:
     def batches(self, epoch_indices: np.ndarray, batch_size: int) -> Iterator[np.ndarray]:
         for start in range(0, len(epoch_indices) - batch_size + 1, batch_size):
             yield epoch_indices[start : start + batch_size]
+
+
+@register_strategy("gradmatch")
+class GradMatchStrategy(SampleStrategy):
+    """OMP subset selection; features arrive via the ``prepare`` hook."""
+
+    config_cls, config_field = GradMatchConfig, "gradmatch"
+
+    def __init__(self, num_samples: int, config: GradMatchConfig | None = None,
+                 seed: int = 0, num_classes: int | None = None):
+        super().__init__(num_samples, config, seed)
+        # num_classes may be omitted only while no reselection ever runs
+        # (registry smoke-builds); prepare() enforces it the moment features
+        # arrive, since single-class OMP would silently change the science.
+        self._num_classes = num_classes
+        self._inner = GradMatchSampler(num_samples, num_classes or 1,
+                                       config, seed)
+
+    def prepare(self, epoch: int, feats_fn: FeatsFn | None = None) -> None:
+        if feats_fn is None or epoch % self._inner.config.interval != 0:
+            return
+        if self._num_classes is None:
+            raise ValueError(
+                "gradmatch needs num_classes for its per-class OMP "
+                "decomposition — pass num_classes to make_strategy/Trainer")
+        feats, labels = feats_fn()
+        self._inner.maybe_reselect(epoch, feats, labels)
+
+    def plan(self, epoch: int) -> EpochPlan:
+        return EpochPlan(epoch=epoch, visible_indices=self._inner.begin_epoch())
+
+    def batch_weights(self, indices: np.ndarray) -> np.ndarray:
+        return self._inner.weights[indices]
+
+    def state_dict(self) -> dict:
+        return {"arrays": {"subset": self._inner.subset,
+                           "weights": self._inner.weights},
+                "host": {"rng": rng_state(self._inner._rng)}}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._inner.subset = np.asarray(state["arrays"]["subset"])
+        self._inner.weights = np.asarray(state["arrays"]["weights"], np.float32)
+        set_rng_state(self._inner._rng, state["host"]["rng"])

@@ -20,6 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.state import SampleState, init_sample_state, scatter_observations
+from repro.core.strategy import (
+    EpochPlan, SampleStrategy, register_strategy, rng_state, set_rng_state,
+)
 
 
 @dataclasses.dataclass
@@ -67,3 +70,42 @@ class InfoBatchSampler:
     def batches(self, epoch_indices: np.ndarray, batch_size: int) -> Iterator[np.ndarray]:
         for start in range(0, len(epoch_indices) - batch_size + 1, batch_size):
             yield epoch_indices[start : start + batch_size]
+
+
+@register_strategy("infobatch")
+class InfoBatchStrategy(SampleStrategy):
+    """Lossless dynamic pruning with 1/(1-r) rescaling weights."""
+
+    config_cls, config_field = InfoBatchConfig, "infobatch"
+
+    def __init__(self, num_samples: int, config: InfoBatchConfig | None = None,
+                 seed: int = 0, total_epochs: int | None = None):
+        cfg = config or InfoBatchConfig()
+        if total_epochs is not None:
+            cfg = dataclasses.replace(cfg, total_epochs=total_epochs)
+        super().__init__(num_samples, cfg, seed)
+        self._inner = InfoBatchSampler(num_samples, cfg, seed)
+
+    @property
+    def state(self) -> SampleState:
+        return self._inner.state
+
+    def plan(self, epoch: int) -> EpochPlan:
+        return EpochPlan(epoch=epoch,
+                         visible_indices=self._inner.begin_epoch(epoch))
+
+    def observe(self, indices, loss, pa, pc, epoch: int) -> None:
+        self._inner.observe(indices, loss, pa, pc, epoch)
+
+    def batch_weights(self, indices: np.ndarray) -> np.ndarray:
+        return self._inner.sample_weights(indices)
+
+    def state_dict(self) -> dict:
+        # weights are not saved: begin_epoch() rebuilds them from the state
+        # before any weight lookup after a restore.
+        return {"arrays": {"state": self._inner.state},
+                "host": {"rng": rng_state(self._inner._rng)}}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._inner.state = jax.tree.map(jnp.asarray, state["arrays"]["state"])
+        set_rng_state(self._inner._rng, state["host"]["rng"])

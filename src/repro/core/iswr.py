@@ -16,6 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.state import SampleState, init_sample_state, scatter_observations
+from repro.core.strategy import (
+    EpochPlan, SampleStrategy, register_strategy, rng_state, set_rng_state,
+)
 
 
 @dataclasses.dataclass
@@ -32,6 +35,7 @@ class ISWRSampler:
         self.state: SampleState = init_sample_state(num_samples, init_loss=1.0)
         self._rng = np.random.default_rng(seed)
         self._observe = jax.jit(scatter_observations)
+        self._last_p = np.full(num_samples, 1.0 / num_samples)
 
     def begin_epoch(self, epoch: int) -> np.ndarray:
         """Return N with-replacement indices for this epoch."""
@@ -58,3 +62,39 @@ class ISWRSampler:
     def batches(self, epoch_indices: np.ndarray, batch_size: int) -> Iterator[np.ndarray]:
         for start in range(0, len(epoch_indices) - batch_size + 1, batch_size):
             yield epoch_indices[start : start + batch_size]
+
+
+@register_strategy("iswr")
+class ISWRStrategy(SampleStrategy):
+    """With-replacement importance sampling behind the strategy protocol."""
+
+    config_cls, config_field = ISWRConfig, "iswr"
+
+    def __init__(self, num_samples: int, config: ISWRConfig | None = None,
+                 seed: int = 0):
+        super().__init__(num_samples, config, seed)
+        self._inner = ISWRSampler(num_samples, config, seed)
+
+    @property
+    def state(self) -> SampleState:
+        return self._inner.state
+
+    def plan(self, epoch: int) -> EpochPlan:
+        return EpochPlan(epoch=epoch,
+                         visible_indices=self._inner.begin_epoch(epoch))
+
+    def observe(self, indices, loss, pa, pc, epoch: int) -> None:
+        self._inner.observe(indices, loss, pa, pc, epoch)
+
+    def batch_weights(self, indices: np.ndarray) -> np.ndarray:
+        return self._inner.sample_weights(indices)
+
+    def state_dict(self) -> dict:
+        # _last_p is not saved: begin_epoch() recomputes it from the state
+        # before any weight lookup after a restore.
+        return {"arrays": {"state": self._inner.state},
+                "host": {"rng": rng_state(self._inner._rng)}}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._inner.state = jax.tree.map(jnp.asarray, state["arrays"]["state"])
+        set_rng_state(self._inner._rng, state["host"]["rng"])

@@ -25,6 +25,9 @@ import numpy as np
 from repro.core import selection as sel
 from repro.core.schedule import FractionSchedule, kakurenbo_lr
 from repro.core.state import SampleState, init_sample_state, scatter_observations, with_hidden
+from repro.core.strategy import (
+    EpochPlan, SampleStrategy, register_strategy, rng_state, set_rng_state,
+)
 
 
 @dataclasses.dataclass
@@ -39,16 +42,6 @@ class KakurenboConfig:
     moveback: bool = True           # MB component
     reduce_fraction: bool = True    # RF component
     # Component toggles above express Table 6's v1000..v1111 ablations.
-
-
-@dataclasses.dataclass
-class EpochPlan:
-    epoch: int
-    visible_indices: np.ndarray   # shuffled, uniform w/o replacement
-    hidden_indices: np.ndarray
-    max_fraction: float           # F_e (ceiling)
-    hidden_fraction: float        # F*_e (actual, after move-back)
-    lr_scale: float               # 1/(1-F*_e) if adjust_lr else 1.0
 
 
 class KakurenboSampler:
@@ -72,12 +65,9 @@ class KakurenboSampler:
     def begin_epoch(self, epoch: int) -> EpochPlan:
         c = self.config
         f_max = float(self._fraction_schedule(epoch))
-        tau = c.tau if c.moveback else -1.0  # tau<0 disables move-back:
-        # every low-loss candidate stays hidden (PC >= -1 is always true for
-        # seen samples but pa gating remains) — to disable fully we bypass:
         if c.moveback:
             hidden = sel.select_hidden(
-                self.state, f_max, method=c.selection, tau=tau,
+                self.state, f_max, method=c.selection, tau=c.tau,
                 drop_top_fraction=c.drop_top_fraction)
         else:
             hidden = _select_no_moveback(self.state, f_max, c.selection,
@@ -96,6 +86,7 @@ class KakurenboSampler:
             max_fraction=f_max,
             hidden_fraction=f_star,
             lr_scale=lr_scale,
+            needs_refresh=bool(hidden_np.any()),
         )
 
     # -- per-batch bookkeeping ----------------------------------------------
@@ -116,18 +107,19 @@ class KakurenboSampler:
     ) -> int:
         """Forward-only pass over the hidden list (paper step D.1).
 
-        Returns the number of refreshed samples (== forward-only extra work).
+        Returns the number of refreshed samples — padding excluded, so the
+        count is exactly the useful forward-only extra work.
         """
         hidden = plan.hidden_indices
         for start in range(0, len(hidden), batch_size):
             idx = hidden[start : start + batch_size]
-            if len(idx) < batch_size:  # pad to keep a single jit signature
-                pad = np.full(batch_size - len(idx), idx[-1] if len(idx) else 0)
-                padded = np.concatenate([idx, pad]) if len(idx) else pad
-                loss, pa, pc = eval_forward(padded)
+            # range() guarantees idx is non-empty; the trailing batch is
+            # padded (repeating its last index) to keep a single jit
+            # signature, and the padded tail is sliced off before observe.
+            if len(idx) < batch_size:
+                pad = np.full(batch_size - len(idx), idx[-1])
+                loss, pa, pc = eval_forward(np.concatenate([idx, pad]))
                 loss, pa, pc = loss[: len(idx)], pa[: len(idx)], pc[: len(idx)]
-                if len(idx) == 0:
-                    continue
             else:
                 loss, pa, pc = eval_forward(idx)
             self.observe(idx, loss, pa, pc, plan.epoch)
@@ -141,6 +133,43 @@ class KakurenboSampler:
         v = plan.visible_indices
         for start in range(0, len(v) - batch_size + 1, batch_size):
             yield v[start : start + batch_size]
+
+
+@register_strategy("kakurenbo")
+class KakurenboStrategy(SampleStrategy):
+    """The paper's method behind the unified strategy protocol."""
+
+    config_cls, config_field = KakurenboConfig, "kakurenbo"
+
+    def __init__(self, num_samples: int, config: KakurenboConfig | None = None,
+                 seed: int = 0):
+        super().__init__(num_samples, config, seed)
+        self._inner = KakurenboSampler(num_samples, config, seed)
+
+    @property
+    def state(self) -> SampleState:
+        return self._inner.state
+
+    @state.setter
+    def state(self, value: SampleState) -> None:
+        self._inner.state = value
+
+    def plan(self, epoch: int) -> EpochPlan:
+        return self._inner.begin_epoch(epoch)
+
+    def observe(self, indices, loss, pa, pc, epoch: int) -> None:
+        self._inner.observe(indices, loss, pa, pc, epoch)
+
+    def on_epoch_end(self, plan: EpochPlan, eval_forward, batch_size: int) -> int:
+        return self._inner.refresh_hidden(plan, eval_forward, batch_size)
+
+    def state_dict(self) -> dict:
+        return {"arrays": {"state": self._inner.state},
+                "host": {"rng": rng_state(self._inner._rng)}}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._inner.state = jax.tree.map(jnp.asarray, state["arrays"]["state"])
+        set_rng_state(self._inner._rng, state["host"]["rng"])
 
 
 def _select_no_moveback(state: SampleState, f_max: float, method: str,

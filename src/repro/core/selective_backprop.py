@@ -16,6 +16,10 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.strategy import (
+    EpochPlan, SampleStrategy, register_strategy, rng_state, set_rng_state,
+)
+
 
 @dataclasses.dataclass
 class SBConfig:
@@ -42,3 +46,40 @@ class SelectiveBackprop:
         keep = (self._rng.random(len(batch_loss)) < prob).astype(np.float32)
         self._hist = np.concatenate([self._hist, batch_loss.astype(np.float32)])[-c.history:]
         return keep
+
+
+@register_strategy("sb")
+class SBStrategy(SampleStrategy):
+    """Forward-then-mask selection as a protocol-level ``select_batch`` hook:
+    the trainer sees ``needs_batch_loss`` and supplies the forward-only
+    losses — no strategy-specific branch in the training loop."""
+
+    config_cls, config_field = SBConfig, "sb"
+    needs_batch_loss = True
+
+    def __init__(self, num_samples: int, config: SBConfig | None = None,
+                 seed: int = 0):
+        super().__init__(num_samples, config, seed)
+        self._inner = SelectiveBackprop(config, seed)
+        self._rng = np.random.default_rng(seed + 1)
+
+    def plan(self, epoch: int) -> EpochPlan:
+        idx = np.arange(self.num_samples)
+        self._rng.shuffle(idx)
+        return EpochPlan(epoch=epoch, visible_indices=idx)
+
+    def select_batch(self, indices: np.ndarray,
+                     loss: np.ndarray) -> np.ndarray:
+        """0/1 keep mask rescaled so the kept samples' mean loss is unbiased."""
+        keep = self._inner.select(np.asarray(loss))
+        return keep * (len(keep) / max(keep.sum(), 1.0))
+
+    def state_dict(self) -> dict:
+        return {"arrays": {"hist": self._inner._hist},
+                "host": {"rng": rng_state(self._rng),
+                         "inner_rng": rng_state(self._inner._rng)}}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._inner._hist = np.asarray(state["arrays"]["hist"], np.float32)
+        set_rng_state(self._rng, state["host"]["rng"])
+        set_rng_state(self._inner._rng, state["host"]["inner_rng"])

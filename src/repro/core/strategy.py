@@ -1,0 +1,207 @@
+"""Unified sample-selection strategy protocol + registry.
+
+Every way of choosing *which samples train this epoch* — KAKURENBO's
+adaptive hiding and each baseline the paper compares against — implements
+one interface, so the trainer, the benchmarks and the pjit launch path are
+strategy-agnostic: adding a strategy is one registered class, zero trainer
+edits.
+
+The per-epoch contract (driven by ``train/trainer.py``):
+
+  1. ``prepare(epoch, feats_fn)``  — optional pre-plan hook (e.g. Grad-Match
+     recollects last-layer gradient features every R epochs).
+  2. ``plan(epoch) -> EpochPlan``  — the epoch's visible index list plus
+     LR scaling, the hidden list, and flags (``needs_refresh`` for
+     KAKURENBO's step-D forward pass, ``reinit_model`` for FORGET's
+     restart-after-warmup).
+  3. per batch: either ``batch_weights(indices)`` (static per-sample weights
+     — ISWR/InfoBatch/Grad-Match) or, when ``needs_batch_loss`` is set,
+     ``select_batch(indices, loss)`` after a forward-only pass
+     (Selective-Backprop's forward-then-mask flow).
+  4. ``observe(indices, loss, pa, pc, epoch)`` — lagging-loss bookkeeping
+     from the training forward pass.
+  5. ``on_epoch_end(plan, eval_forward, batch_size) -> int`` — end-of-epoch
+     work (hidden-list refresh); returns extra forward-pass samples for the
+     work accounting.
+  6. ``state_dict()/load_state_dict()`` — checkpoint/restore, including host
+     RNG states, so a restart resumes the exact trajectory.
+
+Registration mirrors ``configs/registry.py``::
+
+    @register_strategy("kakurenbo")
+    class KakurenboStrategy(SampleStrategy):
+        config_cls, config_field = KakurenboConfig, "kakurenbo"
+
+    strategy = make_strategy("kakurenbo", num_samples, cfg, seed)
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Any, Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class EpochPlan:
+    """One epoch's sampling decision, consumable by any training loop
+    (host trainer or the pjit pod-scale step — see ``launch/train.py``)."""
+
+    epoch: int
+    visible_indices: np.ndarray            # shuffled training index list
+    hidden_indices: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    max_fraction: float = 0.0              # F_e (ceiling)
+    hidden_fraction: float = 0.0           # F*_e (actual, after move-back)
+    lr_scale: float = 1.0                  # Eq. 8 factor (1.0 = off)
+    needs_refresh: bool = False            # run step-D refresh at epoch end
+    reinit_model: bool = False             # restart model from scratch (FORGET)
+
+
+EvalForward = Callable[[np.ndarray], tuple]   # indices -> (loss, pa, pc)
+FeatsFn = Callable[[], tuple[np.ndarray, np.ndarray]]
+
+
+class SampleStrategy:
+    """Base class (and de-facto protocol) for sample-selection strategies.
+
+    Subclasses override what they need; the defaults are the uniform
+    baseline behaviours (no weights, no selection, no end-of-epoch work).
+    """
+
+    name: str = "?"                        # filled in by @register_strategy
+    config_cls: type | None = None         # dataclass type of the config
+    config_field: str | None = None        # attr name on a composite config
+    needs_batch_loss: bool = False         # SB-style forward-then-select
+
+    def __init__(self, num_samples: int, config: Any = None, seed: int = 0):
+        self.num_samples = num_samples
+        self.config = config
+        self.seed = seed
+
+    # -- epoch boundary ------------------------------------------------------
+
+    def prepare(self, epoch: int, feats_fn: FeatsFn | None = None) -> None:
+        """Pre-plan hook; ``feats_fn`` lazily yields (features, labels)."""
+
+    def plan(self, epoch: int) -> EpochPlan:
+        raise NotImplementedError
+
+    # -- per-batch -----------------------------------------------------------
+
+    def observe(self, indices, loss, pa, pc, epoch: int) -> None:
+        """Record lagging (loss, PA, PC) from the training forward pass."""
+
+    def batch_weights(self, indices: np.ndarray) -> np.ndarray | None:
+        """Static per-sample loss weights for this batch (None = uniform)."""
+        return None
+
+    def select_batch(self, indices: np.ndarray,
+                     loss: np.ndarray) -> np.ndarray | None:
+        """Forward-then-mask hook: per-sample backward weights (0 = dropped).
+
+        Only consulted when ``needs_batch_loss`` is True; ``loss`` comes
+        from a forward-only pass over the batch.
+        """
+        return None
+
+    # -- epoch end -----------------------------------------------------------
+
+    def on_epoch_end(self, plan: EpochPlan, eval_forward: EvalForward,
+                     batch_size: int) -> int:
+        """End-of-epoch work; returns extra forward-sample count."""
+        return 0
+
+    # -- checkpoint/restore --------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """``{"arrays": <pytree of arrays>, "host": <json-able dict>}``.
+
+        The arrays part must have a construction-time-stable tree structure
+        (it becomes checkpoint leaves); host carries RNG states and flags.
+        """
+        return {"arrays": {}, "host": {}}
+
+    def load_state_dict(self, state: dict) -> None:
+        if state.get("arrays") or state.get("host"):
+            raise ValueError(
+                f"{type(self).__name__} has no state to restore into")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+STRATEGIES: dict[str, type[SampleStrategy]] = {}
+
+
+def register_strategy(name: str):
+    """Class decorator: ``@register_strategy("kakurenbo")``."""
+
+    def deco(cls: type[SampleStrategy]) -> type[SampleStrategy]:
+        if name in STRATEGIES and STRATEGIES[name] is not cls:
+            raise ValueError(f"strategy {name!r} already registered")
+        cls.name = name
+        STRATEGIES[name] = cls
+        return cls
+
+    return deco
+
+
+def _ensure_registered() -> None:
+    # Importing the package pulls in every strategy module (core/__init__.py),
+    # which runs the @register_strategy decorators.
+    import repro.core  # noqa: F401
+
+
+def available_strategies() -> list[str]:
+    _ensure_registered()
+    return sorted(STRATEGIES)
+
+
+def make_strategy(name: str, num_samples: int, cfg: Any = None,
+                  seed: int = 0, **extras: Any) -> SampleStrategy:
+    """Build a registered strategy.
+
+    ``cfg`` may be the strategy's own config dataclass or any composite
+    object carrying it as attribute ``cls.config_field`` (e.g. the
+    trainer's ``TrainConfig``).  ``extras`` (``num_classes``,
+    ``total_epochs``, ...) are forwarded only to strategies whose
+    constructor declares them, so callers can pass a superset.
+    """
+    _ensure_registered()
+    if name not in STRATEGIES:
+        raise ValueError(
+            f"unknown strategy {name!r}; known: {available_strategies()}")
+    cls = STRATEGIES[name]
+    if cls.config_cls is None:
+        cfg_obj = None                       # strategy takes no config
+    elif cfg is None or isinstance(cfg, cls.config_cls):
+        cfg_obj = cfg
+    else:
+        # Composite config: must actually carry the right field — silently
+        # falling back to defaults would report results under wrong
+        # hyperparameters.
+        cfg_obj = getattr(cfg, cls.config_field or "", None)
+        if not isinstance(cfg_obj, cls.config_cls):
+            raise TypeError(
+                f"cfg for strategy {name!r} must be {cls.config_cls.__name__}"
+                f" or carry a .{cls.config_field} of that type; got "
+                f"{type(cfg).__name__}")
+    params = inspect.signature(cls.__init__).parameters
+    kw = {k: v for k, v in extras.items() if k in params}
+    return cls(num_samples, cfg_obj, seed=seed, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers for strategy implementations
+# ---------------------------------------------------------------------------
+
+
+def rng_state(rng: np.random.Generator) -> dict:
+    return rng.bit_generator.state
+
+
+def set_rng_state(rng: np.random.Generator, state: dict) -> None:
+    rng.bit_generator.state = state

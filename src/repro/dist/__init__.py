@@ -1,0 +1,8 @@
+"""Distributed substrate: mesh-aware sharding specs, shard_map compat and
+gradient compression (error-feedback quantization)."""
+from repro.dist.sharding import (  # noqa: F401
+    ParallelCtx, shard_map_compat, spec_tree_for,
+)
+from repro.dist.compression import (  # noqa: F401
+    compress_grads, init_error_feedback,
+)

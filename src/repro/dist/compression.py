@@ -1,0 +1,43 @@
+"""Gradient compression with error feedback (EF-SGD style).
+
+Per-leaf uniform 8-bit quantization: each step quantizes ``g + e`` (gradient
+plus the carried error) to 255 levels of its own max-abs scale and carries
+the quantization residual into the next step.  Error feedback makes the
+*accumulated* compressed gradients track the true gradient sum to within one
+step's quantization error, so convergence is unaffected while the wire
+format shrinks 4x (the collective would ship int8 + one f32 scale per leaf).
+
+Pure jnp, shape-preserving, jit/pjit-safe — the trainer folds it into the
+jitted train step and the pjit path can apply it before the grad psum.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+_LEVELS = 127.0  # symmetric int8
+
+
+def init_error_feedback(params: Any) -> Any:
+    """Zero residual tree matching ``params`` (call once at startup)."""
+    return jax.tree.map(lambda p: jnp.zeros_like(p), params)
+
+
+def compress_grads(grads: Any, ef: Any) -> tuple[Any, Any]:
+    """Quantize ``grads + ef``; return (compressed grads, new residuals)."""
+
+    def one(g, e):
+        v = g + e
+        scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-12) / _LEVELS
+        q = jnp.round(v / scale) * scale
+        q = q.astype(g.dtype)
+        return q, (v - q).astype(g.dtype)
+
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_e = jax.tree.leaves(ef)
+    out = [one(g, e) for g, e in zip(leaves_g, leaves_e)]
+    cg = treedef.unflatten([q for q, _ in out])
+    new_ef = treedef.unflatten([r for _, r in out])
+    return cg, new_ef

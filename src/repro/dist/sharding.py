@@ -1,0 +1,159 @@
+"""Logical-axis sharding: ``ParallelCtx`` maps model-code logical names to
+mesh axes.
+
+Model code annotates params and activations with *logical* axis names
+(``"batch"``, ``"fsdp"``, ``"tp"``, ``"exp"``, ``"seq_tp"``); the context
+resolves them against whatever mesh the launcher built:
+
+  - ``"batch"``   -> the data axes (``("data",)`` or ``("pod", "data")``)
+  - ``"fsdp"``    -> the data axes, but only when ``ctx.fsdp`` (ZeRO-style
+                     param sharding above the size threshold)
+  - ``"tp"``      -> the ``"model"`` axis (tensor parallelism)
+  - ``"exp"``     -> the ``"model"`` axis (expert parallelism; same axis,
+                     different collective pattern — see models/moe.py)
+  - ``"seq_tp"``  -> the ``"model"`` axis, only under sequence-parallel KV
+  - ``None``      -> replicated
+
+A dim is only sharded when its size divides evenly over the mapped mesh
+axes — e.g. GQA KV heads that don't divide the tp degree stay replicated
+(models/attention.py relies on this).  With ``mesh=None`` every spec is
+fully replicated and ``cs`` is the identity, so the same model code runs
+single-device (tests) and on the pod mesh unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:  # newer jax: top-level export
+    from jax import shard_map as _sm_mod
+    _shard_map = getattr(_sm_mod, "shard_map", _sm_mod)
+except ImportError:  # pragma: no cover - jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_MODEL_AXIS = "model"
+_DATA_AXES = ("pod", "data")
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, check_vma: bool = False):
+    """shard_map across jax versions (``check_vma`` vs older ``check_rep``)."""
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+    except TypeError:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+@dataclasses.dataclass
+class ParallelCtx:
+    """Resolves logical axis names against a concrete mesh (or none)."""
+
+    mesh: Mesh | None = None
+    fsdp: bool = False
+    seq_parallel_kv: bool = False
+    remat: bool = False
+    dp_only: bool = False              # fold "model" into the data axes
+    remat_policy: str = "nothing"      # "nothing" | "dots"
+    moe_fsdp_mode: str = "gather"      # "gather" (ZeRO-3) | "partial"
+
+    # -- mesh-derived views --------------------------------------------------
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return tuple(self.mesh.axis_names) if self.mesh is not None else ()
+
+    @property
+    def dp_axes(self) -> tuple[str, ...]:
+        """Data-parallel axes in mesh order (pod-major)."""
+        names = self.axis_names
+        dp = tuple(a for a in names if a in _DATA_AXES)
+        if self.dp_only and _MODEL_AXIS in names:
+            dp = dp + (_MODEL_AXIS,)
+        return dp
+
+    @property
+    def tp_axis(self) -> str | None:
+        if self.dp_only or self.mesh is None:
+            return None
+        return _MODEL_AXIS if _MODEL_AXIS in self.axis_names else None
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis] if self.tp_axis else 1
+
+    @property
+    def dp_size(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.dp_axes) if self.mesh else 1
+
+    # -- logical resolution --------------------------------------------------
+
+    def _axes_for(self, name: str | None) -> tuple[str, ...]:
+        if name is None:
+            return ()
+        if name == "batch":
+            return self.dp_axes
+        if name == "fsdp":
+            return self.dp_axes if self.fsdp else ()
+        if name in ("tp", "exp"):
+            return (self.tp_axis,) if self.tp_axis else ()
+        if name == "seq_tp":
+            return ((self.tp_axis,) if self.seq_parallel_kv and self.tp_axis
+                    else ())
+        raise ValueError(f"unknown logical axis {name!r}")
+
+    def spec(self, *logical: str | None, dims: tuple[int, ...] | None = None) -> P:
+        """PartitionSpec for one array given per-dim logical names.
+
+        ``dims`` (the array shape) enables the divisibility guard: a dim
+        whose size doesn't divide over the mapped mesh axes is replicated.
+        """
+        if self.mesh is None:
+            return P()
+        entries: list[Any] = []
+        used: set[str] = set()
+        for i, name in enumerate(logical):
+            axes = tuple(a for a in self._axes_for(name) if a not in used)
+            if axes and dims is not None:
+                span = math.prod(self.mesh.shape[a] for a in axes)
+                if dims[i] % span != 0:
+                    axes = ()
+            used.update(axes)
+            if not axes:
+                entries.append(None)
+            elif len(axes) == 1:
+                entries.append(axes[0])
+            else:
+                entries.append(axes)
+        return P(*entries)
+
+    def cs(self, x: jax.Array, *logical: str | None) -> jax.Array:
+        """with_sharding_constraint under the logical mapping (no-op off-mesh)."""
+        if self.mesh is None:
+            return x
+        spec = self.spec(*logical, dims=tuple(x.shape))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def _is_logical(x: Any) -> bool:
+    return isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+
+
+def spec_tree_for(logical: Any, ctx: ParallelCtx, abstract: Any = None) -> Any:
+    """Map a tree of logical-axis tuples to a tree of PartitionSpecs.
+
+    ``abstract`` (matching tree of ShapeDtypeStructs) supplies the shapes
+    for the divisibility guard; without it, specs are taken at face value.
+    """
+    if abstract is None:
+        return jax.tree.map(lambda lg: ctx.spec(*lg), logical,
+                            is_leaf=_is_logical)
+    return jax.tree.map(
+        lambda lg, ab: ctx.spec(*lg, dims=tuple(ab.shape)),
+        logical, abstract, is_leaf=_is_logical)

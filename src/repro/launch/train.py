@@ -3,17 +3,27 @@
 Shared by the dry-run (AOT lower/compile) and the real launcher: the same
 ``make_train_step`` output is either ``.lower().compile()``'d against
 abstract inputs or executed on a live mesh.
+
+Sample selection plugs in through the same ``SampleStrategy`` protocol the
+host trainer uses: the launcher builds a strategy via
+``repro.core.make_strategy``, each epoch's ``EpochPlan`` is sliced across
+the data-parallel workers with ``plan_worker_indices`` (bit-identical to
+the single-host index order), and ``plan_lr`` folds the plan's Eq. 8
+factor into the step's learning rate.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, Iterator
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.strategy import EpochPlan
+from repro.data.pipeline import worker_slice
 from repro.dist.sharding import ParallelCtx
 from repro.models.model import Model
 from repro.optim.optimizers import Optimizer, make_optimizer
@@ -43,6 +53,45 @@ def make_train_step(model: Model, opt: Optimizer):
         return params, opt_state, loss, metrics
 
     return train_step
+
+
+# ---------------------------------------------------------------------------
+# EpochPlan consumption (strategy protocol -> pod-scale step feeding)
+# ---------------------------------------------------------------------------
+
+
+def plan_worker_indices(plan: EpochPlan, world_size: int, rank: int,
+                        batch_per_worker: int) -> np.ndarray:
+    """One data-parallel worker's view of a plan's visible set.
+
+    Every worker calls this on the *same* plan (strategies are seeded, so
+    all hosts compute identical plans); the union of the per-rank slices,
+    batch by batch, reproduces the single-host batch order exactly — the
+    property elastic rescaling relies on (train/fault.py).
+    """
+    return worker_slice(plan.visible_indices, world_size, rank,
+                        batch_per_worker)
+
+
+def plan_lr(base_lr: float, plan: EpochPlan) -> float:
+    """Fold the plan's Eq. 8 factor into the step LR."""
+    return float(base_lr) * float(plan.lr_scale)
+
+
+def plan_global_batches(plan: EpochPlan, world_size: int,
+                        batch_per_worker: int) -> Iterator[np.ndarray]:
+    """Global-batch index arrays of shape (world_size * batch_per_worker,)
+    in pjit layout: reshaping to (world_size, batch_per_worker) gives each
+    rank's sub-batch, matching a batch array sharded over the data axes.
+
+    By worker_slice's construction (trim, reshape (-1, W, B), take column
+    r), global batch s is exactly the s-th consecutive W*B-chunk of the
+    plan's visible set — so yield those chunks directly.
+    """
+    gb = world_size * batch_per_worker
+    v = plan.visible_indices
+    for start in range(0, (len(v) // gb) * gb, gb):
+        yield v[start : start + gb]
 
 
 def _pad_spec(spec: P, ndim: int) -> tuple:

@@ -20,11 +20,7 @@ import jax.numpy as jnp
 
 from repro.models.common import ParamDef
 from repro.configs.base import MoEConfig, round_up
-
-try:  # JAX >= 0.4.35 exposes shard_map at top level
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.dist.sharding import shard_map_compat as _shard_map
 
 from jax.sharding import PartitionSpec as P
 

@@ -314,8 +314,8 @@ def _decode_block(cfg: ArchConfig, ctx: ParallelCtx, p: dict, x: jax.Array,
 
 def _sp_decode_attend(ctx: ParallelCtx, q, kc, vc, cache_len):
     """Sequence-parallel flash-decode: KV sharded over 'model' on seq dim."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+    from repro.dist.sharding import shard_map_compat as shard_map
     dp = ctx.dp_axes
 
     def inner(q_l, k_l, v_l, n):

@@ -1,14 +1,19 @@
-"""Epoch-based trainer integrating KAKURENBO and every baseline strategy.
+"""Epoch-based trainer over the unified ``SampleStrategy`` protocol.
 
 This is the host-side training loop used by the paper-reproduction
 experiments and the end-to-end examples (single process; the pod-scale pjit
-train step lives in ``repro.launch.train`` and shares the same Model API).
+train step lives in ``repro.launch.train`` and shares the same Model API
+and ``EpochPlan`` contract).
 
-Strategies: baseline | kakurenbo | iswr | forget | sb | gradmatch |
-random | infobatch.
-The trainer owns: jitted train/eval steps, the sampler, LR scheduling
-(incl. Eq. 8), work accounting (fwd/bwd sample counts — the quantity the
-paper's speedup comes from), checkpoint/restart and failure injection.
+The trainer is strategy-agnostic: every selection method — KAKURENBO and
+all baselines — arrives through ``repro.core.make_strategy`` and drives the
+loop exclusively via the protocol (``plan`` / ``observe`` /
+``batch_weights`` / ``select_batch`` / ``on_epoch_end`` /
+``state_dict``).  Adding a strategy never touches this file.
+
+The trainer owns: jitted train/eval steps, LR scheduling (incl. Eq. 8 via
+``plan.lr_scale``), work accounting (fwd/bwd sample counts — the quantity
+the paper's speedup comes from), checkpoint/restart and failure injection.
 """
 from __future__ import annotations
 
@@ -22,9 +27,8 @@ import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.core import (
-    ForgetConfig, ForgetSampler, ISWRConfig, ISWRSampler, InfoBatchConfig,
-    InfoBatchSampler, KakurenboConfig, KakurenboSampler, LRSchedule,
-    SBConfig, SelectiveBackprop, GradMatchConfig, GradMatchSampler,
+    ForgetConfig, ISWRConfig, InfoBatchConfig, KakurenboConfig, LRSchedule,
+    SBConfig, GradMatchConfig, SampleStrategy, make_strategy,
 )
 from repro.data.pipeline import Pipeline
 from repro.dist.compression import compress_grads, init_error_feedback
@@ -76,7 +80,8 @@ class Trainer:
                  loss_fn: Callable[[Any, dict], tuple],
                  dataset, test_dataset=None,
                  num_classes: int | None = None,
-                 feats_fn: Callable | None = None):
+                 feats_fn: Callable | None = None,
+                 strategy: SampleStrategy | None = None):
         self.cfg = cfg
         self.dataset = dataset
         self.test_dataset = test_dataset
@@ -92,38 +97,18 @@ class Trainer:
                          if cfg.grad_compression else None)
         self.epoch = 0
         self.history: list[EpochStats] = []
-        self._build_sampler(num_classes)
+        self.strategy = strategy or make_strategy(
+            cfg.strategy, self.num_samples, cfg=cfg, seed=cfg.seed,
+            num_classes=num_classes, total_epochs=cfg.epochs)
         self.feats_fn = feats_fn
         self._jit_steps()
 
-    # ------------------------------------------------------------------ setup
+    # Legacy alias: tests and notebooks reach sampler state via tr.sampler.
+    @property
+    def sampler(self) -> SampleStrategy:
+        return self.strategy
 
-    def _build_sampler(self, num_classes):
-        c, n = self.cfg, self.num_samples
-        self.sb = None
-        if c.strategy in ("baseline",):
-            self.sampler = None
-        elif c.strategy == "kakurenbo":
-            self.sampler = KakurenboSampler(n, c.kakurenbo, c.seed)
-        elif c.strategy == "random":
-            kc = dataclasses.replace(c.kakurenbo)
-            self.sampler = KakurenboSampler(n, kc, c.seed)
-        elif c.strategy == "iswr":
-            self.sampler = ISWRSampler(n, c.iswr, c.seed)
-        elif c.strategy == "forget":
-            self.sampler = ForgetSampler(n, c.forget, c.seed)
-        elif c.strategy == "sb":
-            self.sampler = None
-            self.sb = SelectiveBackprop(c.sb, c.seed)
-        elif c.strategy == "gradmatch":
-            assert num_classes is not None
-            self.sampler = GradMatchSampler(n, num_classes, c.gradmatch, c.seed)
-        elif c.strategy == "infobatch":
-            ib = dataclasses.replace(c.infobatch, total_epochs=c.epochs)
-            self.sampler = InfoBatchSampler(n, ib, c.seed)
-        else:
-            raise ValueError(f"unknown strategy {c.strategy!r}")
-        self._shuffle_rng = np.random.default_rng(c.seed + 1)
+    # ------------------------------------------------------------------ setup
 
     def _jit_steps(self):
         opt, loss_fn, compress = self.opt, self.loss_fn, self.cfg.grad_compression
@@ -145,46 +130,6 @@ class Trainer:
 
     # ------------------------------------------------------------------ epochs
 
-    def _epoch_indices(self, epoch: int):
-        """Returns (indices, plan_or_None) honoring the strategy."""
-        c = self.cfg
-        if c.strategy in ("baseline", "sb"):
-            idx = np.arange(self.num_samples)
-            self._shuffle_rng.shuffle(idx)
-            return idx, None
-        if c.strategy in ("kakurenbo", "random"):
-            if c.strategy == "random":
-                self._randomize_losses()
-            plan = self.sampler.begin_epoch(epoch)
-            return plan.visible_indices, plan
-        if c.strategy in ("iswr", "infobatch"):
-            return self.sampler.begin_epoch(epoch), None
-        if c.strategy == "forget":
-            idx = self.sampler.begin_epoch(epoch)
-            if self.sampler.should_restart:
-                # FORGET restarts training from scratch on the pruned set.
-                self.params = self._init_params(self.rng)
-                self.opt_state = self.opt.init(self.params)
-            return idx, None
-        if c.strategy == "gradmatch":
-            if self.feats_fn is not None and epoch % c.gradmatch.interval == 0:
-                feats, labels = self._collect_feats()
-                self.sampler.maybe_reselect(epoch, feats, labels)
-            return self.sampler.begin_epoch(), None
-        raise AssertionError
-
-    def _randomize_losses(self):
-        """'random' baseline (App. C.4): importance = iid uniform."""
-        from repro.core.state import SampleState
-        import dataclasses as dc
-        n = self.num_samples
-        self.sampler.state = dc.replace(
-            self.sampler.state,
-            loss=jnp.asarray(self._shuffle_rng.random(n), jnp.float32),
-            pa=jnp.ones((n,), bool),
-            pc=jnp.ones((n,), jnp.float32),
-            seen=jnp.zeros((n,), jnp.int32))
-
     def _collect_feats(self):
         feats, labels = [], []
         for idx, batch in self.pipeline.batches(np.arange(self.num_samples)):
@@ -193,56 +138,55 @@ class Trainer:
             labels.append(batch["labels"])
         return np.concatenate(feats), np.concatenate(labels)
 
+    def _epoch_indices(self, epoch: int):
+        """Returns (visible indices, EpochPlan) for this epoch."""
+        self.strategy.prepare(
+            epoch, self._collect_feats if self.feats_fn is not None else None)
+        plan = self.strategy.plan(epoch)
+        if plan.reinit_model:
+            # e.g. FORGET: restart training from scratch on the pruned set.
+            self.params = self._init_params(self.rng)
+            self.opt_state = self.opt.init(self.params)
+        return plan.visible_indices, plan
+
     def run_epoch(self, epoch: int) -> EpochStats:
         c = self.cfg
         t0 = time.perf_counter()
         indices, plan = self._epoch_indices(epoch)
-        lr_scale = plan.lr_scale if plan is not None else 1.0
-        lr = float(c.lr(epoch)) * lr_scale
+        lr = float(c.lr(epoch)) * plan.lr_scale
         fwd = bwd = 0
         losses = []
         for idx, batch in self.pipeline.batches(indices):
-            weight = None
-            if c.strategy == "sb":
+            fwd += len(idx)
+            if self.strategy.needs_batch_loss:
                 # forward-only pass for selection, then masked backward
                 lv, _, _ = self._eval_step(self.params, batch)
-                keep = self.sb.select(np.asarray(lv))
-                weight = jnp.asarray(keep * (len(keep) / max(keep.sum(), 1.0)),
-                                     jnp.float32)
-                fwd += len(idx)
-                bwd += int(keep.sum())
-            elif c.strategy == "gradmatch":
-                weight = jnp.asarray(self.sampler.weights[idx], jnp.float32)
-                fwd += len(idx)
-                bwd += len(idx)
+                weight = self.strategy.select_batch(idx, np.asarray(lv))
+                bwd += int(np.count_nonzero(weight))
             else:
-                fwd += len(idx)
+                weight = self.strategy.batch_weights(idx)
                 bwd += len(idx)
             b = dict(batch)
             if weight is not None:
-                b["weight"] = weight
-            if c.strategy in ("iswr", "infobatch"):
-                b["weight"] = jnp.asarray(self.sampler.sample_weights(idx))
+                b["weight"] = jnp.asarray(weight, jnp.float32)
             self.params, self.opt_state, self.ef_state, scalar, metrics = (
                 self._train_step(self.params, self.opt_state, self.ef_state,
                                  b, lr))
             losses.append(float(scalar))
-            if self.sampler is not None and hasattr(self.sampler, "observe"):
-                lv, pa, pc = metrics
-                self.sampler.observe(idx, lv, pa, pc, epoch)
-        # KAKURENBO step D: forward-only refresh of the hidden list.
-        if plan is not None and len(plan.hidden_indices):
+            lv, pa, pc = metrics
+            self.strategy.observe(idx, lv, pa, pc, epoch)
+        if plan.needs_refresh:
+            # KAKURENBO step D: forward-only refresh of the hidden list.
             def fwd_fn(idx):
                 return self._eval_step(self.params, self.dataset.get(idx))
-            n_ref = self.sampler.refresh_hidden(plan, fwd_fn, c.batch_size)
-            fwd += n_ref
+            fwd += self.strategy.on_epoch_end(plan, fwd_fn, c.batch_size)
         acc = self.evaluate() if (self.test_dataset is not None
                                   and epoch % c.eval_every == 0) else float("nan")
         stats = EpochStats(
             epoch=epoch,
             train_loss=float(np.mean(losses)) if losses else float("nan"),
             test_acc=acc,
-            hidden_fraction=plan.hidden_fraction if plan is not None else 0.0,
+            hidden_fraction=plan.hidden_fraction,
             fwd_samples=fwd, bwd_samples=bwd, lr=lr,
             wall_time=time.perf_counter() - t0)
         self.history.append(stats)
@@ -277,45 +221,46 @@ class Trainer:
 
     # ------------------------------------------------------------------ fault tolerance
 
-    def _ckpt_tree(self):
-        tree = {"params": self.params, "opt_state": self.opt_state}
-        if self.sampler is not None and hasattr(self.sampler, "state"):
-            tree["sampler_state"] = self.sampler.state
-        return tree
+    def _ckpt_tree(self, strategy_sd: dict | None = None):
+        sd = strategy_sd or self.strategy.state_dict()
+        return {"params": self.params, "opt_state": self.opt_state,
+                "strategy": sd["arrays"]}
 
     def save_checkpoint(self) -> str | None:
         if not self.cfg.checkpoint_dir:
             return None
-        # Host RNG states (epoch shuffles / with-replacement draws) must be
-        # checkpointed too — without them a restart re-shuffles differently
-        # and the resumed trajectory silently diverges from the uninterrupted
-        # one (caught by test_checkpoint_restart_bit_exact).
-        meta = {"epoch": self.epoch,
-                "shuffle_rng": self._shuffle_rng.bit_generator.state}
-        if self.sampler is not None and hasattr(self.sampler, "_rng"):
-            meta["sampler_rng"] = self.sampler._rng.bit_generator.state
-        if self.sb is not None:
-            meta["sb_rng"] = self.sb._rng.bit_generator.state
+        # The strategy's host state (epoch-shuffle / with-replacement RNGs,
+        # restart flags) must be checkpointed too — without it a restart
+        # re-shuffles differently and the resumed trajectory silently
+        # diverges from the uninterrupted one
+        # (caught by test_checkpoint_restart_bit_exact).
+        sd = self.strategy.state_dict()
         return ckpt.save(self.cfg.checkpoint_dir, self.epoch,
-                         self._ckpt_tree(), metadata=meta)
+                         self._ckpt_tree(sd),
+                         metadata={"epoch": self.epoch,
+                                   "strategy": sd["host"]})
 
     def restore_latest(self) -> bool:
         if not self.cfg.checkpoint_dir:
             return False
-        res = ckpt.restore_latest(self.cfg.checkpoint_dir, self._ckpt_tree())
+        try:
+            res = ckpt.restore_latest(self.cfg.checkpoint_dir,
+                                      self._ckpt_tree())
+        except ValueError as e:
+            # e.g. a pre-strategy-format checkpoint with a different leaf set
+            raise ValueError(
+                f"incompatible checkpoint in {self.cfg.checkpoint_dir!r} "
+                f"(old format?): {e}") from e
         if res is None:
             return False
         tree, meta, step = res
+        if "strategy" not in meta:
+            raise ValueError(
+                f"checkpoint step {step} predates the strategy state format "
+                "(no 'strategy' metadata) — cannot restore RNG state")
         self.params = tree["params"]
         self.opt_state = tree["opt_state"]
-        if "sampler_state" in tree and self.sampler is not None:
-            self.sampler.state = jax.tree.map(jnp.asarray,
-                                              tree["sampler_state"])
+        self.strategy.load_state_dict(
+            {"arrays": tree["strategy"], "host": meta["strategy"]})
         self.epoch = meta["epoch"]
-        if "shuffle_rng" in meta:
-            self._shuffle_rng.bit_generator.state = meta["shuffle_rng"]
-        if "sampler_rng" in meta and hasattr(self.sampler, "_rng"):
-            self.sampler._rng.bit_generator.state = meta["sampler_rng"]
-        if "sb_rng" in meta and self.sb is not None:
-            self.sb._rng.bit_generator.state = meta["sb_rng"]
         return True

@@ -79,7 +79,15 @@ def test_reduced_decode_step(arch, rng):
 @pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-130m", "hymba-1.5b",
                                   "phi3.5-moe-42b-a6.6b"])
 def test_reduced_prefill_matches_forward(arch, rng):
+    import dataclasses
     cfg = ARCHS[arch].reduced()
+    if cfg.moe is not None:
+        # Capacity-based routing drops tokens as a function of the *whole*
+        # batch (T=66 in the reference forward vs T=2 in decode), so
+        # prefill/decode path equivalence is only well-defined when no
+        # expert overflows; give the smoke config headroom so none do.
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 1)), jnp.int32)

@@ -14,8 +14,8 @@ _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.dist.sharding import shard_map_compat
 from repro.core.state import init_sample_state, scatter_observations
 from repro.core.selection import select_hidden_histogram, select_hidden
 
@@ -35,14 +35,10 @@ sharded = jax.device_put(state, NamedSharding(mesh, P("data")))
 def local_select(st):
     return select_hidden_histogram(st, 0.3, axis_names=("data",))
 
-out = shard_map.shard_map(
+out = shard_map_compat(
     local_select, mesh=mesh, in_specs=(P("data"),), out_specs=P("data"),
     check_vma=False,
-)(sharded) if hasattr(shard_map, "shard_map") else None
-if out is None:
-    from jax import shard_map as sm
-    out = sm(local_select, mesh=mesh, in_specs=(P("data"),),
-             out_specs=P("data"), check_vma=False)(sharded)
+)(sharded)
 got = np.asarray(out)
 agree = (got == ref).mean()
 print(f"agreement={agree:.4f} hidden_ref={ref.sum()} hidden_dist={got.sum()}")
