@@ -1,12 +1,32 @@
-"""Table 1 complexity row: selection cost — paper-faithful O(N log N) sort vs
-the beyond-paper O(N) histogram threshold (+ its Pallas kernel)."""
+"""Table 1 complexity row: selection/plan cost of the device-resident engine.
+
+Three selection methods — paper-faithful O(N log N) ``sort``, the O(N)
+histogram-CDF ``histogram`` and its Pallas-kernel twin ``histogram_pallas``
+(interpret mode on this CPU container) — timed both as the raw jitted
+``select_hidden`` and as the full jitted epoch plan step
+(``KakurenboSampler.begin_epoch``: selection + move-back + device shuffle +
+one host sync).
+
+Also demonstrates the engine's host-sync contract by driving one simulated
+epoch through both observation paths and counting SampleState host round
+trips: legacy per-batch ``observe()`` pays batches+1, the fused path
+(scatter inside the jitted train step) pays exactly 1.
+
+Emits one ``BENCH {json}`` line per measurement (the perf-trajectory seed)
+alongside the legacy CSV rows.
+"""
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import init_sample_state, scatter_observations, select_hidden
+from repro.core import (
+    KakurenboConfig, KakurenboSampler, SELECTION_METHODS, init_sample_state,
+    scatter_observations, select_hidden,
+)
+from repro.launch.train import plan_summary
 from benchmarks.common import csv_row
 
 
@@ -20,18 +40,79 @@ def _bench(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _observed_state(n: int, seed: int = 0):
+    r = np.random.default_rng(seed)
+    s = init_sample_state(n)
+    return scatter_observations(
+        s, jnp.arange(n), jnp.asarray(r.exponential(1, n), jnp.float32),
+        jnp.ones(n, bool), jnp.full(n, 0.9, jnp.float32), 0)
+
+
+def _plan_time_us(n: int, method: str, iters: int = 5) -> float:
+    """Full epoch plan step (selection + shuffle + the 1 host sync)."""
+    ks = KakurenboSampler(n, KakurenboConfig(selection=method))
+    ks.state = _observed_state(n)
+    ks.begin_epoch(0)  # compile
+    t0 = time.perf_counter()
+    for e in range(1, iters + 1):
+        ks.begin_epoch(e)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _epoch_sync_counts(n: int = 4096, batch: int = 256) -> dict:
+    """One simulated epoch through both observation paths; count SampleState
+    host round trips (observe dispatches + the plan materialisation)."""
+    r = np.random.default_rng(0)
+    batches = [
+        (np.arange(i, i + batch),
+         jnp.asarray(r.exponential(1, batch), jnp.float32),
+         jnp.ones(batch, bool), jnp.full(batch, 0.9, jnp.float32))
+        for i in range(0, n, batch)
+    ]
+
+    legacy = KakurenboSampler(n)
+    for idx, lv, pa, pc in batches:
+        legacy.observe(idx, lv, pa, pc, 0)   # host dispatch per batch
+    legacy.begin_epoch(1)
+
+    fused = KakurenboSampler(n)
+    step = jax.jit(scatter_observations, donate_argnums=0)
+    state = fused.state                      # stays on device all epoch...
+    for idx, lv, pa, pc in batches:
+        state = step(state, jnp.asarray(idx), lv, pa, pc, 0)
+    fused.state = state                      # ...handed back once
+    plan = fused.begin_epoch(1)
+
+    return {"batches": len(batches),
+            "host_syncs_legacy": legacy.host_round_trips,
+            "host_syncs_fused": fused.host_round_trips,
+            "plan": plan_summary(plan)}
+
+
 def main() -> None:
     for n in (100_000, 1_000_000):
-        r = np.random.default_rng(0)
-        s = init_sample_state(n)
-        s = scatter_observations(
-            s, jnp.arange(n), jnp.asarray(r.exponential(1, n), jnp.float32),
-            jnp.ones(n, bool), jnp.full(n, 0.9, jnp.float32), 0)
-        t_sort = _bench(lambda st: select_hidden(st, 0.3, method="sort"), s)
-        t_hist = _bench(lambda st: select_hidden(st, 0.3, method="histogram"), s)
-        print(csv_row(f"selection/sort_N{n}", t_sort, "method=argsort;O(NlogN)"))
-        print(csv_row(f"selection/hist_N{n}", t_hist,
-                      f"method=histogram;O(N);speedup={t_sort / t_hist:.2f}x"))
+        s = _observed_state(n)
+        times = {}
+        for method in SELECTION_METHODS:
+            if method == "histogram_pallas" and n > 100_000:
+                continue  # interpret-mode kernels: bench the smaller N only
+            times[method] = _bench(
+                lambda st, m=method: select_hidden(st, 0.3, method=m), s)
+        base = times["sort"]
+        for method, t in times.items():
+            note = ("method=argsort;O(NlogN)" if method == "sort" else
+                    f"method={method};O(N);speedup={base / t:.2f}x")
+            print(csv_row(f"selection/{method}_N{n}", t, note))
+            plan_us = _plan_time_us(n, method, iters=3)
+            print("BENCH " + json.dumps({
+                "bench": "selection_overhead", "n": n, "method": method,
+                "select_us": round(t, 1), "plan_us": round(plan_us, 1),
+                "speedup_vs_sort": round(base / t, 2)}))
+
+    sync = _epoch_sync_counts()
+    assert sync["host_syncs_fused"] == 1, sync
+    assert sync["host_syncs_legacy"] == sync["batches"] + 1, sync
+    print("BENCH " + json.dumps({"bench": "sample_state_host_syncs", **sync}))
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ from repro.core.state import (  # noqa: F401
 )
 from repro.core.selection import (  # noqa: F401
     select_hidden, select_hidden_sort, select_hidden_histogram,
-    histogram_threshold, HIST_BINS,
+    histogram_threshold, HIST_BINS, SELECTION_METHODS,
 )
 from repro.core.schedule import (  # noqa: F401
     FractionSchedule, LRSchedule, kakurenbo_lr, linear_scaling_rule,

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.kakurenbo import KakurenboConfig, KakurenboSampler
+from repro.core.state import scatter_observations
 from repro.core.strategy import (
     EpochPlan, SampleStrategy, register_strategy, rng_state, set_rng_state,
 )
@@ -46,6 +47,7 @@ class RandomStrategy(SampleStrategy):
     """Random hiding (App. C.4): KAKURENBO with iid-uniform importance."""
 
     config_cls, config_field = KakurenboConfig, "kakurenbo"
+    fused_observe = staticmethod(scatter_observations)
 
     def __init__(self, num_samples: int, config: KakurenboConfig | None = None,
                  seed: int = 0):
@@ -57,6 +59,12 @@ class RandomStrategy(SampleStrategy):
     @property
     def state(self):
         return self._inner.state
+
+    def get_device_state(self):
+        return self._inner.state
+
+    def set_device_state(self, state) -> None:
+        self._inner.state = state
 
     def _randomize_importance(self) -> None:
         """Overwrite the lagging state with iid-uniform 'losses' that are
@@ -82,11 +90,11 @@ class RandomStrategy(SampleStrategy):
         return self._inner.refresh_hidden(plan, eval_forward, batch_size)
 
     def state_dict(self) -> dict:
-        return {"arrays": {"state": self._inner.state},
-                "host": {"rng": rng_state(self._rng),
-                         "inner_rng": rng_state(self._inner._rng)}}
+        return {"arrays": {"state": self._inner.state,
+                           "inner_key": self._inner.key_data()},
+                "host": {"rng": rng_state(self._rng)}}
 
     def load_state_dict(self, state: dict) -> None:
         self._inner.state = jax.tree.map(jnp.asarray, state["arrays"]["state"])
+        self._inner.load_key_data(state["arrays"]["inner_key"])
         set_rng_state(self._rng, state["host"]["rng"])
-        set_rng_state(self._inner._rng, state["host"]["inner_rng"])

@@ -79,6 +79,7 @@ class ForgetStrategy(SampleStrategy):
     """Warmup -> prune-unforgettables -> restart, as one plan() flag."""
 
     config_cls, config_field = ForgetConfig, "forget"
+    fused_observe = staticmethod(scatter_observations)
 
     def __init__(self, num_samples: int, config: ForgetConfig | None = None,
                  seed: int = 0):
@@ -89,10 +90,19 @@ class ForgetStrategy(SampleStrategy):
     def state(self) -> SampleState:
         return self._inner.state
 
+    def get_device_state(self) -> SampleState:
+        return self._inner.state
+
+    def set_device_state(self, state: SampleState) -> None:
+        self._inner.state = state
+
     def plan(self, epoch: int) -> EpochPlan:
         idx = self._inner.begin_epoch(epoch)
+        # begin_epoch reads forget-event counts at the prune epoch; count
+        # the epoch boundary as one host sync like the other planners.
         return EpochPlan(epoch=epoch, visible_indices=idx,
-                         reinit_model=self._inner.should_restart)
+                         reinit_model=self._inner.should_restart,
+                         host_syncs=1)
 
     def observe(self, indices, loss, pa, pc, epoch: int) -> None:
         self._inner.observe(indices, loss, pa, pc, epoch)

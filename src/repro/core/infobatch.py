@@ -77,6 +77,7 @@ class InfoBatchStrategy(SampleStrategy):
     """Lossless dynamic pruning with 1/(1-r) rescaling weights."""
 
     config_cls, config_field = InfoBatchConfig, "infobatch"
+    fused_observe = staticmethod(scatter_observations)
 
     def __init__(self, num_samples: int, config: InfoBatchConfig | None = None,
                  seed: int = 0, total_epochs: int | None = None):
@@ -90,9 +91,17 @@ class InfoBatchStrategy(SampleStrategy):
     def state(self) -> SampleState:
         return self._inner.state
 
+    def get_device_state(self) -> SampleState:
+        return self._inner.state
+
+    def set_device_state(self, state: SampleState) -> None:
+        self._inner.state = state
+
     def plan(self, epoch: int) -> EpochPlan:
+        # begin_epoch materialises loss/seen for the pruning: 1 host sync.
         return EpochPlan(epoch=epoch,
-                         visible_indices=self._inner.begin_epoch(epoch))
+                         visible_indices=self._inner.begin_epoch(epoch),
+                         host_syncs=1)
 
     def observe(self, indices, loss, pa, pc, epoch: int) -> None:
         self._inner.observe(indices, loss, pa, pc, epoch)

@@ -69,6 +69,7 @@ class ISWRStrategy(SampleStrategy):
     """With-replacement importance sampling behind the strategy protocol."""
 
     config_cls, config_field = ISWRConfig, "iswr"
+    fused_observe = staticmethod(scatter_observations)
 
     def __init__(self, num_samples: int, config: ISWRConfig | None = None,
                  seed: int = 0):
@@ -79,9 +80,17 @@ class ISWRStrategy(SampleStrategy):
     def state(self) -> SampleState:
         return self._inner.state
 
+    def get_device_state(self) -> SampleState:
+        return self._inner.state
+
+    def set_device_state(self, state: SampleState) -> None:
+        self._inner.state = state
+
     def plan(self, epoch: int) -> EpochPlan:
+        # begin_epoch materialises the loss array for the draw: 1 host sync.
         return EpochPlan(epoch=epoch,
-                         visible_indices=self._inner.begin_epoch(epoch))
+                         visible_indices=self._inner.begin_epoch(epoch),
+                         host_syncs=1)
 
     def observe(self, indices, loss, pa, pc, epoch: int) -> None:
         self._inner.observe(indices, loss, pa, pc, epoch)

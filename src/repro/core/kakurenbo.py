@@ -12,10 +12,18 @@ This module is model-agnostic: the trainer supplies
   train_step(batch_indices)  -> (per-sample loss, pa, pc) and
   eval_forward(batch_indices) -> (loss, pa, pc)
 while this class owns the SampleState and the epoch plan.
+
+Device residency: the whole epoch plan — selection, move-back and the
+visible-index permutation — is ONE jitted step (``_plan_step``) driven by a
+checkpointable jax PRNG key, and per-batch observation is fused into the
+trainer's jitted train step (``KakurenboStrategy.fused_observe``).
+``SampleState`` therefore crosses the host boundary exactly once per epoch:
+the ``jax.device_get`` that materialises the EpochPlan's index lists.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Iterator
 
 import jax
@@ -25,9 +33,7 @@ import numpy as np
 from repro.core import selection as sel
 from repro.core.schedule import FractionSchedule, kakurenbo_lr
 from repro.core.state import SampleState, init_sample_state, scatter_observations, with_hidden
-from repro.core.strategy import (
-    EpochPlan, SampleStrategy, register_strategy, rng_state, set_rng_state,
-)
+from repro.core.strategy import EpochPlan, SampleStrategy, register_strategy
 
 
 @dataclasses.dataclass
@@ -36,12 +42,42 @@ class KakurenboConfig:
     fraction_alphas: tuple[float, ...] = (1.0, 0.8, 0.6, 0.4)
     fraction_milestones: tuple[int, ...] = (0, 30, 60, 80)
     tau: float = 0.7
-    selection: str = "sort"        # "sort" (paper) | "histogram" (optimized)
+    # "sort" (paper) | "histogram" (optimized) | "histogram_pallas" (kernel)
+    selection: str = "sort"
     drop_top_fraction: float = 0.0  # DropTop (App. D)
     adjust_lr: bool = True          # LR component (Eq. 8)
     moveback: bool = True           # MB component
     reduce_fraction: bool = True    # RF component
     # Component toggles above express Table 6's v1000..v1111 ablations.
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("method", "tau", "drop_top", "moveback", "adjust_lr"))
+def _plan_step(state: SampleState, key: jax.Array, f_max: jax.Array, *,
+               method: str, tau: float, drop_top: float, moveback: bool,
+               adjust_lr: bool):
+    """The entire epoch plan as one device-resident step.
+
+    Selection + move-back + the visible/hidden split + the epoch shuffle all
+    happen on device; returns (hidden mask, permuted index order with the
+    visible set first, hidden count, F*, Eq. 8 LR factor).
+    """
+    hidden = sel.select_hidden(state, f_max, method=method, tau=tau,
+                               drop_top_fraction=drop_top, moveback=moveback)
+    n = state.num_samples
+    perm = jax.random.permutation(key, n)
+    # Stable-sort the random permutation by hiddenness: visible indices come
+    # first in uniformly-shuffled order (the epoch's batch order), hidden
+    # indices follow — one fixed-shape array instead of two ragged ones.
+    order = perm[jnp.argsort(hidden[perm], stable=True)]
+    num_hidden = jnp.sum(hidden).astype(jnp.int32)
+    f_star = num_hidden.astype(jnp.float32) / n
+    if adjust_lr:
+        lr_scale = kakurenbo_lr(jnp.float32(1.0), f_star)
+    else:
+        lr_scale = jnp.float32(1.0)
+    return hidden, order, num_hidden, f_star, lr_scale
 
 
 class KakurenboSampler:
@@ -51,7 +87,11 @@ class KakurenboSampler:
                  seed: int = 0):
         self.config = config or KakurenboConfig()
         self.state: SampleState = init_sample_state(num_samples)
-        self._rng = np.random.default_rng(seed)
+        self._key = jax.random.key(seed)
+        # Host round trips involving SampleState: host-dispatched observe
+        # scatters + per-epoch plan materialisations. The fused trainer path
+        # keeps this at 1/epoch; the legacy path pays 1/batch on top.
+        self.host_round_trips = 0
         c = self.config
         self._fraction_schedule = FractionSchedule(
             max_fraction=c.max_fraction,
@@ -65,35 +105,39 @@ class KakurenboSampler:
     def begin_epoch(self, epoch: int) -> EpochPlan:
         c = self.config
         f_max = float(self._fraction_schedule(epoch))
-        if c.moveback:
-            hidden = sel.select_hidden(
-                self.state, f_max, method=c.selection, tau=c.tau,
-                drop_top_fraction=c.drop_top_fraction)
-        else:
-            hidden = _select_no_moveback(self.state, f_max, c.selection,
-                                         c.drop_top_fraction)
+        self._key, sub = jax.random.split(self._key)
+        hidden, order, num_hidden, f_star, lr_scale = _plan_step(
+            self.state, sub, jnp.float32(f_max), method=c.selection,
+            tau=c.tau, drop_top=c.drop_top_fraction, moveback=c.moveback,
+            adjust_lr=c.adjust_lr)
         self.state = with_hidden(self.state, hidden)
-        hidden_np = np.asarray(hidden)
-        all_idx = np.arange(self.state.num_samples)
-        visible = all_idx[~hidden_np]
-        self._rng.shuffle(visible)
-        f_star = float(hidden_np.mean())
-        lr_scale = float(kakurenbo_lr(jnp.float32(1.0), f_star)) if c.adjust_lr else 1.0
+        # The single host sync of the epoch: materialise the plan.
+        order_np, nh, f_star, lr_scale = jax.device_get(
+            (order, num_hidden, f_star, lr_scale))
+        self.host_round_trips += 1
+        n = self.state.num_samples
+        nh = int(nh)
         return EpochPlan(
             epoch=epoch,
-            visible_indices=visible,
-            hidden_indices=all_idx[hidden_np],
+            visible_indices=order_np[: n - nh],
+            hidden_indices=np.sort(order_np[n - nh:]),
             max_fraction=f_max,
-            hidden_fraction=f_star,
-            lr_scale=lr_scale,
-            needs_refresh=bool(hidden_np.any()),
+            hidden_fraction=float(f_star),
+            lr_scale=float(lr_scale),
+            needs_refresh=nh > 0,
+            host_syncs=1,
         )
 
     # -- per-batch bookkeeping ----------------------------------------------
 
     def observe(self, indices: np.ndarray | jax.Array, loss: jax.Array,
                 pa: jax.Array, pc: jax.Array, epoch: int) -> None:
-        """Record lagging loss/PA/PC from a training or refresh batch."""
+        """Record lagging loss/PA/PC from a training or refresh batch.
+
+        Host-dispatched path; the fused trainer performs this scatter inside
+        its jitted train step instead (see ``KakurenboStrategy.fused_observe``).
+        """
+        self.host_round_trips += 1
         self.state = self._observe(self.state, jnp.asarray(indices), loss, pa,
                                    pc, epoch)
 
@@ -134,12 +178,23 @@ class KakurenboSampler:
         for start in range(0, len(v) - batch_size + 1, batch_size):
             yield v[start : start + batch_size]
 
+    # -- checkpointable device RNG -------------------------------------------
+
+    def key_data(self) -> jax.Array:
+        """Serializable uint32 view of the epoch-shuffle PRNG key."""
+        return jax.random.key_data(self._key)
+
+    def load_key_data(self, data) -> None:
+        self._key = jax.random.wrap_key_data(
+            jnp.asarray(data, jnp.uint32), impl="threefry2x32")
+
 
 @register_strategy("kakurenbo")
 class KakurenboStrategy(SampleStrategy):
     """The paper's method behind the unified strategy protocol."""
 
     config_cls, config_field = KakurenboConfig, "kakurenbo"
+    fused_observe = staticmethod(scatter_observations)
 
     def __init__(self, num_samples: int, config: KakurenboConfig | None = None,
                  seed: int = 0):
@@ -154,6 +209,16 @@ class KakurenboStrategy(SampleStrategy):
     def state(self, value: SampleState) -> None:
         self._inner.state = value
 
+    @property
+    def host_round_trips(self) -> int:
+        return self._inner.host_round_trips
+
+    def get_device_state(self) -> SampleState:
+        return self._inner.state
+
+    def set_device_state(self, state: SampleState) -> None:
+        self._inner.state = state
+
     def plan(self, epoch: int) -> EpochPlan:
         return self._inner.begin_epoch(epoch)
 
@@ -164,23 +229,10 @@ class KakurenboStrategy(SampleStrategy):
         return self._inner.refresh_hidden(plan, eval_forward, batch_size)
 
     def state_dict(self) -> dict:
-        return {"arrays": {"state": self._inner.state},
-                "host": {"rng": rng_state(self._inner._rng)}}
+        return {"arrays": {"state": self._inner.state,
+                           "rng_key": self._inner.key_data()},
+                "host": {"rng_impl": "threefry2x32"}}
 
     def load_state_dict(self, state: dict) -> None:
         self._inner.state = jax.tree.map(jnp.asarray, state["arrays"]["state"])
-        set_rng_state(self._inner._rng, state["host"]["rng"])
-
-
-def _select_no_moveback(state: SampleState, f_max: float, method: str,
-                        drop_top: float) -> jax.Array:
-    """HE without MB: hide the lowest-loss candidates unconditionally."""
-    n = state.num_samples
-    num_hide = int(np.floor(f_max * n))
-    order = jnp.argsort(state.loss)
-    rank = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
-    hidden = (rank < num_hide) & (state.seen >= 0)
-    if drop_top > 0:
-        num_top = int(np.floor(drop_top * n))
-        hidden = hidden | ((rank >= n - num_top) & (state.seen >= 0))
-    return hidden
+        self._inner.load_key_data(state["arrays"]["rng_key"])

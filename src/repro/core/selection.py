@@ -1,22 +1,33 @@
 """Hidden-sample selection.
 
-Two interchangeable implementations of step B of the paper (Fig. 1):
+Three interchangeable implementations of step B of the paper (Fig. 1),
+selectable via ``KakurenboConfig.selection``:
 
-1. ``select_hidden_sort`` — the *paper-faithful* method: rank every sample by
-   lagging loss (O(N log N) sort, the complexity the paper itself reports in
-   Table 1) and hide the lowest-loss fraction <= F, then apply the move-back
-   rule (Sec. 3.1).
+1. ``"sort"`` — the *paper-faithful* method: rank every sample by lagging
+   loss (O(N log N) sort, the complexity the paper itself reports in
+   Table 1) and hide the lowest-loss fraction <= F, then apply the
+   move-back rule (Sec. 3.1).
 
-2. ``select_hidden_histogram`` — the *beyond-paper optimized* method: find the
-   loss value t such that ~F*N samples have loss < t using a fixed-size
-   histogram (one pass over the local shard + a bins-sized psum when run under
-   shard_map), then hide {loss < t}.  O(N) compute, O(bins) communication —
-   removes both the sort and the O(N)-sized all-gather.
+2. ``"histogram"`` — the *beyond-paper optimized* method: find the loss
+   value t such that ~F*N samples have loss < t using a fixed-size
+   histogram (one pass over the local shard + a bins-sized psum when run
+   under shard_map), then hide {loss < t}.  O(N) compute, O(bins)
+   communication — removes both the sort and the O(N)-sized all-gather.
 
-Both return a boolean hidden mask and honour the same move-back rule:
-a candidate stays hidden only if it was *correctly predicted with
-confidence >= tau* at its last observation; otherwise it is moved back to the
-training list.  Never-seen samples (seen < 0) are never hidden.
+3. ``"histogram_pallas"`` — the same histogram-CDF math with the range and
+   histogram passes computed by the Pallas streaming kernels
+   (kernels/threshold_select.py): loss tiles stay in VMEM, only (bins,) + 2
+   scalars leave the kernel.  Bit-identical masks to ``"histogram"`` (same
+   binning formula, exact integer counts), so the differential parity suite
+   (tests/test_selection_parity.py) asserts equality, not tolerance.
+
+All methods return a boolean hidden mask and honour the same move-back
+rule: a candidate stays hidden only if it was *correctly predicted with
+confidence >= tau* at its last observation; otherwise it is moved back to
+the training list.  Never-seen samples (seen < 0) are never hidden.
+DropTop (paper App. D) — additionally hiding the highest-loss tail — is
+supported by every method; the histogram paths mirror the bottom-tail CDF
+walk from the top bin down.
 """
 from __future__ import annotations
 
@@ -29,11 +40,20 @@ from repro.core.state import SampleState
 
 HIST_BINS = 512
 
+#: Methods accepted by ``select_hidden`` / ``KakurenboConfig.selection``.
+SELECTION_METHODS = ("sort", "histogram", "histogram_pallas")
 
-def _moveback_eligible(state: SampleState, tau: float) -> jax.Array:
-    """True where a sample is allowed to stay hidden (paper Sec. 3.1)."""
-    confident_correct = state.pa & (state.pc >= tau)
-    return confident_correct & (state.seen >= 0)
+
+def _eligible(state: SampleState, tau: float, moveback: bool) -> jax.Array:
+    """True where a sample is allowed to stay hidden.
+
+    With move-back (paper Sec. 3.1) a candidate must have been confidently
+    correct at its last observation; without it (Table 6 ablation) any
+    observed sample may hide.  Never-seen samples are never hidden.
+    """
+    if not moveback:
+        return state.seen >= 0
+    return state.pa & (state.pc >= tau) & (state.seen >= 0)
 
 
 def select_hidden_sort(
@@ -41,6 +61,7 @@ def select_hidden_sort(
     max_fraction: jax.Array | float,
     tau: float = 0.7,
     drop_top_fraction: float = 0.0,
+    moveback: bool = True,
 ) -> jax.Array:
     """Paper-faithful selection: global sort by lagging loss.
 
@@ -50,6 +71,7 @@ def select_hidden_sort(
       tau: prediction-confidence threshold for move-back.
       drop_top_fraction: optional DropTop (paper App. D) — additionally hide
         this fraction of the *highest*-loss samples (noisy/unlearnable).
+      moveback: apply the move-back rule (False = HE-only ablation).
 
     Returns:
       (N,) bool hidden mask. The actual hidden fraction F* <= F because of
@@ -62,12 +84,20 @@ def select_hidden_sort(
     order = jnp.argsort(state.loss)  # O(N log N): the paper's own complexity.
     rank = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
     candidate = rank < num_hide
-    hidden = candidate & _moveback_eligible(state, tau)
+    hidden = candidate & _eligible(state, tau, moveback)
     if drop_top_fraction > 0.0:
         num_top = jnp.floor(jnp.asarray(drop_top_fraction) * n).astype(jnp.int32)
         # DropTop ignores move-back: these are hard/noisy samples, hidden
-        # unconditionally (App. D), but never-seen samples are exempt.
-        top = (rank >= n - num_top) & (state.seen >= 0)
+        # unconditionally (App. D), but never-seen samples are exempt — and
+        # must not *occupy* the top-rank window either (their sentinel
+        # losses sort above every real loss), so rank them below everything:
+        # both histogram paths count only valid samples and this keeps the
+        # three methods agreeing on which tail gets dropped.
+        valid = state.seen >= 0
+        order_top = jnp.argsort(jnp.where(valid, state.loss, -jnp.inf))
+        rank_top = jnp.zeros((n,), jnp.int32).at[order_top].set(
+            jnp.arange(n, dtype=jnp.int32))
+        top = (rank_top >= n - num_top) & valid
         hidden = hidden | top
     return hidden
 
@@ -102,6 +132,9 @@ def select_hidden_histogram(
     tau: float = 0.7,
     bins: int = HIST_BINS,
     axis_names: tuple[str, ...] = (),
+    drop_top_fraction: float = 0.0,
+    moveback: bool = True,
+    use_kernel: bool = False,
 ) -> jax.Array:
     """Optimized selection: histogram-CDF threshold instead of a sort.
 
@@ -109,9 +142,14 @@ def select_hidden_histogram(
     axes: local histograms are psum'd so every shard derives the same global
     threshold from O(bins) communicated scalars.
 
-    Guarantees hidden_count <= ceil(F*N) + (bin collision slack); the
-    threshold is conservative (uses the bin edge at or *below* the exact
-    quantile would be unsafe, so we mask ranks inside the boundary bin).
+    ``use_kernel=True`` computes the range and histogram passes with the
+    Pallas streaming kernels (method ``"histogram_pallas"``); the threshold
+    and mask math is shared, so both paths produce bit-identical masks.
+
+    Guarantees hidden_count <= floor(F*N) + (boundary-bin slack); the CDF
+    walk cannot split the boundary bin without a rank tie-break, so it is
+    either excluded (undershoot — always safe, F is a ceiling, Sec. 3.1) or
+    included when excluding it would under-fill by more than half the bin.
     """
     n_local = state.num_samples
     max_fraction = jnp.asarray(max_fraction, jnp.float32)
@@ -135,13 +173,22 @@ def select_hidden_histogram(
     n_global = _psum(jnp.asarray(n_local, jnp.float32))
     num_hide = jnp.floor(max_fraction * n_global).astype(jnp.int32)
     big = jnp.float32(3.4e38)
-    lo = _pmin(jnp.min(jnp.where(valid, state.loss, big)))
-    hi = _pmax(jnp.max(jnp.where(valid, state.loss, -big)))
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        lo, hi = kernel_ops.loss_minmax(state.loss, valid)
+    else:
+        lo = jnp.min(jnp.where(valid, state.loss, big))
+        hi = jnp.max(jnp.where(valid, state.loss, -big))
+    lo = _pmin(lo)
+    hi = _pmax(hi)
     lo = jnp.minimum(lo, hi)  # degenerate all-invalid shards
 
     span = jnp.maximum(hi - lo, 1e-12)
     idx = jnp.clip(((state.loss - lo) / span * bins).astype(jnp.int32), 0, bins - 1)
-    hist = jnp.zeros((bins,), jnp.int32).at[idx].add(valid.astype(jnp.int32))
+    if use_kernel:
+        hist = kernel_ops.loss_histogram(state.loss, valid, lo, hi, bins)
+    else:
+        hist = jnp.zeros((bins,), jnp.int32).at[idx].add(valid.astype(jnp.int32))
     hist = _psum(hist)
     cdf = jnp.cumsum(hist)
     b = jnp.clip(jnp.searchsorted(cdf, num_hide, side="left"), 0, bins - 1)
@@ -153,10 +200,25 @@ def select_hidden_histogram(
     below = jnp.where(b > 0, cdf[jnp.maximum(b - 1, 0)], 0)
     include_b = (num_hide - below) * 2 >= hist[b]
     candidate = jnp.where(include_b, idx <= b, idx < b) & valid
-    return candidate & _moveback_eligible(state, tau)
+    hidden = candidate & _eligible(state, tau, moveback)
+    if drop_top_fraction > 0.0:
+        # DropTop: the same CDF walk mirrored from the top bin down. Like
+        # the sort path, it ignores move-back but exempts never-seen samples.
+        num_top = jnp.floor(
+            jnp.asarray(drop_top_fraction, jnp.float32) * n_global
+        ).astype(jnp.int32)
+        rcdf = jnp.cumsum(hist[::-1])  # rcdf[j] = count in the top j+1 bins
+        bt = jnp.clip(jnp.searchsorted(rcdf, num_top, side="left"), 0, bins - 1)
+        b_top = bins - 1 - bt
+        above = jnp.where(bt > 0, rcdf[jnp.maximum(bt - 1, 0)], 0)
+        include_bt = (num_top - above) * 2 >= hist[b_top]
+        top = jnp.where(include_bt, idx >= b_top, idx > b_top) & valid
+        hidden = hidden | top
+    return hidden
 
 
-@functools.partial(jax.jit, static_argnames=("method", "tau", "drop_top_fraction"))
+@functools.partial(
+    jax.jit, static_argnames=("method", "tau", "drop_top_fraction", "moveback"))
 def select_hidden(
     state: SampleState,
     max_fraction: jax.Array | float,
@@ -164,10 +226,16 @@ def select_hidden(
     method: str = "sort",
     tau: float = 0.7,
     drop_top_fraction: float = 0.0,
+    moveback: bool = True,
 ) -> jax.Array:
-    """Jitted single-host entry point (tests/examples)."""
+    """Jitted single-host entry point (trainer plan step, tests, examples)."""
     if method == "sort":
-        return select_hidden_sort(state, max_fraction, tau, drop_top_fraction)
-    elif method == "histogram":
-        return select_hidden_histogram(state, max_fraction, tau)
-    raise ValueError(f"unknown selection method {method!r}")
+        return select_hidden_sort(state, max_fraction, tau, drop_top_fraction,
+                                  moveback)
+    elif method in ("histogram", "histogram_pallas"):
+        return select_hidden_histogram(
+            state, max_fraction, tau,
+            drop_top_fraction=drop_top_fraction, moveback=moveback,
+            use_kernel=(method == "histogram_pallas"))
+    raise ValueError(
+        f"unknown selection method {method!r}; known: {SELECTION_METHODS}")

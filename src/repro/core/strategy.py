@@ -57,6 +57,7 @@ class EpochPlan:
     lr_scale: float = 1.0                  # Eq. 8 factor (1.0 = off)
     needs_refresh: bool = False            # run step-D refresh at epoch end
     reinit_model: bool = False             # restart model from scratch (FORGET)
+    host_syncs: int = 0                    # device->host syncs spent planning
 
 
 EvalForward = Callable[[np.ndarray], tuple]   # indices -> (loss, pa, pc)
@@ -74,6 +75,14 @@ class SampleStrategy:
     config_cls: type | None = None         # dataclass type of the config
     config_field: str | None = None        # attr name on a composite config
     needs_batch_loss: bool = False         # SB-style forward-then-select
+
+    #: Device-resident observation hook: a *pure* function
+    #: ``(state_pytree, indices, loss, pa, pc, epoch) -> state_pytree`` the
+    #: trainer fuses into its jitted train step, so per-batch bookkeeping
+    #: never leaves the device. None = the trainer falls back to per-batch
+    #: host-side ``observe()`` calls. Strategies exposing this must also
+    #: implement ``get_device_state``/``set_device_state``.
+    fused_observe: Callable | None = None
 
     def __init__(self, num_samples: int, config: Any = None, seed: int = 0):
         self.num_samples = num_samples
@@ -102,9 +111,25 @@ class SampleStrategy:
         """Forward-then-mask hook: per-sample backward weights (0 = dropped).
 
         Only consulted when ``needs_batch_loss`` is True; ``loss`` comes
-        from a forward-only pass over the batch.
+        from a forward-only pass over the batch.  ``None`` means uniform:
+        every sample in the batch trains with weight 1.
         """
         return None
+
+    # -- device-resident state (fused_observe strategies) --------------------
+
+    def get_device_state(self):
+        """Pytree of device arrays consumed/produced by ``fused_observe``.
+
+        The trainer fetches this once after ``plan()``, threads it through
+        the jitted train step for the whole epoch, and hands the final value
+        back via ``set_device_state`` — zero per-batch host round trips.
+        """
+        return None
+
+    def set_device_state(self, state) -> None:
+        raise NotImplementedError(
+            f"{type(self).__name__} declares no device-resident state")
 
     # -- epoch end -----------------------------------------------------------
 

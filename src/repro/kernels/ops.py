@@ -82,14 +82,28 @@ def loss_confidence(logits, labels):
             pmax[:t].reshape(shape))
 
 
-@functools.partial(jax.jit, static_argnames=("bins",))
-def loss_histogram(loss, valid, lo, hi, bins: int = 512):
+def _pad_masked(loss, valid, blk: int = 2048):
+    """Pad to a blk multiple with valid=0 entries (invisible to the masked
+    reductions), so any N drives the fixed-block kernels."""
     n = loss.shape[0]
-    blk = 2048
     if n % blk:
         pad = blk - n % blk
         loss = jnp.pad(loss, (0, pad))
         valid = jnp.pad(valid, (0, pad))
-    return _ts.histogram_kernel(loss, valid, lo, hi, bins=bins,
-                                blk_n=min(blk, loss.shape[0]),
+    return loss, valid, min(blk, loss.shape[0])
+
+
+@functools.partial(jax.jit, static_argnames=("bins",))
+def loss_histogram(loss, valid, lo, hi, bins: int = 512):
+    loss, valid, blk = _pad_masked(loss, valid)
+    return _ts.histogram_kernel(loss, valid, lo, hi, bins=bins, blk_n=blk,
                                 interpret=INTERPRET)
+
+
+@jax.jit
+def loss_minmax(loss, valid):
+    """Raw (lo, hi) scalars of the valid losses (no degeneracy fold — see
+    threshold_select.minmax_kernel)."""
+    loss, valid, blk = _pad_masked(loss, valid)
+    mm = _ts.minmax_kernel(loss, valid, blk_n=blk, interpret=INTERPRET)
+    return mm[0], mm[1]

@@ -45,3 +45,11 @@ def histogram_ref(loss: jax.Array, valid: jax.Array, lo: jax.Array,
     span = jnp.maximum(hi - lo, 1e-12)
     idx = jnp.clip(((loss - lo) / span * bins).astype(jnp.int32), 0, bins - 1)
     return jnp.zeros((bins,), jnp.int32).at[idx].add(valid.astype(jnp.int32))
+
+
+def minmax_ref(loss: jax.Array, valid: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Raw (lo, hi) of the valid losses; [BIG, -BIG] when none are valid."""
+    from repro.kernels.threshold_select import BIG
+    lo = jnp.min(jnp.where(valid, loss, jnp.float32(BIG)))
+    hi = jnp.max(jnp.where(valid, loss, jnp.float32(-BIG)))
+    return lo, hi

@@ -1,11 +1,19 @@
-"""Loss-histogram Pallas kernel for O(N) hidden-sample selection.
+"""Loss-histogram Pallas kernels for O(N) hidden-sample selection.
 
 The paper's selection sorts all N lagging losses (O(N log N), its own listed
 bottleneck in Table 1).  The optimized selection replaces the sort with a
-fixed 512-bin histogram + CDF threshold (core/selection.py); this kernel
-computes the local histogram in one streaming pass: loss tiles land in VMEM,
-are binned via a one-hot iota compare (VPU) and reduced into a persistent
-(bins,) scratch accumulator across the sequential grid.
+fixed 512-bin histogram + CDF threshold (core/selection.py, method
+``"histogram_pallas"``).  Two streaming passes over the losses:
+
+1. ``minmax_kernel`` — the range pass: per-tile masked min/max reduced into
+   a persistent 2-scalar SMEM accumulator, yielding the raw (lo, hi) bin
+   range of the valid losses.
+2. ``histogram_kernel`` — loss tiles land in VMEM, are binned via a one-hot
+   iota compare (VPU) and reduced into a persistent (bins,) scratch
+   accumulator across the sequential grid.
+
+Both return *raw* local reductions so a sharded caller can psum/pmin/pmax
+them before deriving the CDF threshold (see select_hidden_histogram).
 """
 from __future__ import annotations
 
@@ -15,6 +23,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# Sentinel for masked min/max: finite so f32 arithmetic on it stays exact
+# and (lo - hi) on an all-invalid input does not produce inf/nan.
+BIG = 3.4e38
 
 
 def _kernel(loss_ref, valid_ref, range_ref, hist_ref, acc_ref, *, bins: int):
@@ -62,3 +74,64 @@ def histogram_kernel(loss: jax.Array, valid: jax.Array, lo: jax.Array,
         scratch_shapes=[pltpu.VMEM((bins,), jnp.int32)],
         interpret=interpret,
     )(loss, valid.astype(jnp.int32), rng)
+
+
+def _minmax_kernel(loss_ref, valid_ref, out_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[0] = jnp.float32(BIG)
+        acc_ref[1] = jnp.float32(-BIG)
+
+    x = loss_ref[...].astype(jnp.float32)            # (blk_n,)
+    valid = valid_ref[...] != 0                      # (blk_n,)
+    acc_ref[0] = jnp.minimum(acc_ref[0], jnp.min(jnp.where(valid, x, BIG)))
+    acc_ref[1] = jnp.maximum(acc_ref[1], jnp.max(jnp.where(valid, x, -BIG)))
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _final():
+        out_ref[0] = acc_ref[0]
+        out_ref[1] = acc_ref[1]
+
+
+def minmax_kernel(loss: jax.Array, valid: jax.Array, blk_n: int = 2048,
+                  interpret: bool = True) -> jax.Array:
+    """Range pass: (N,) loss + valid mask -> (2,) f32 raw [lo, hi].
+
+    Raw means no degeneracy fold: an all-invalid input yields
+    [BIG, -BIG], which the caller collapses (lo = min(lo, hi)) *after* any
+    cross-shard pmin/pmax so sharded and single-device results agree.
+    """
+    n = loss.shape[0]
+    blk_n = min(blk_n, n)
+    assert n % blk_n == 0, (n, blk_n)
+    return pl.pallas_call(
+        _minmax_kernel,
+        grid=(n // blk_n,),
+        in_specs=[
+            pl.BlockSpec((blk_n,), lambda i: (i,)),
+            pl.BlockSpec((blk_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((2,), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((2,), jnp.float32)],
+        interpret=interpret,
+    )(loss, valid.astype(jnp.int32))
+
+
+def histogram_with_range(loss: jax.Array, valid: jax.Array, bins: int = 512,
+                         blk_n: int = 2048, interpret: bool = True
+                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused two-pass selection front end: (hist, lo_raw, hi_raw).
+
+    The range pass feeds the histogram pass on device; nothing crosses the
+    host boundary.
+    """
+    mm = minmax_kernel(loss, valid, blk_n=blk_n, interpret=interpret)
+    lo_raw, hi_raw = mm[0], mm[1]
+    # Bin over the folded range but return the raw extrema for collectives.
+    lo = jnp.minimum(lo_raw, hi_raw)
+    hist = histogram_kernel(loss, valid, lo, hi_raw, bins=bins, blk_n=blk_n,
+                            interpret=interpret)
+    return hist, lo_raw, hi_raw

@@ -78,6 +78,25 @@ def plan_lr(base_lr: float, plan: EpochPlan) -> float:
     return float(base_lr) * float(plan.lr_scale)
 
 
+def plan_summary(plan: EpochPlan) -> dict:
+    """One JSON-able record per epoch plan.
+
+    What the launcher logs each epoch and benchmarks/selection_overhead.py
+    aggregates: the plan's shape plus how many device->host syncs producing
+    it cost (the device-resident plan step spends exactly one).
+    """
+    return {
+        "epoch": int(plan.epoch),
+        "visible": int(len(plan.visible_indices)),
+        "hidden": int(len(plan.hidden_indices)),
+        "max_fraction": float(plan.max_fraction),
+        "hidden_fraction": float(plan.hidden_fraction),
+        "lr_scale": float(plan.lr_scale),
+        "needs_refresh": bool(plan.needs_refresh),
+        "host_syncs": int(plan.host_syncs),
+    }
+
+
 def plan_global_batches(plan: EpochPlan, world_size: int,
                         batch_per_worker: int) -> Iterator[np.ndarray]:
     """Global-batch index arrays of shape (world_size * batch_per_worker,)

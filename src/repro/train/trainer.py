@@ -57,6 +57,11 @@ class TrainConfig:
     checkpoint_every: int = 0          # epochs; 0 = only on demand
     seed: int = 0
     eval_every: int = 1
+    # Fuse the strategy's per-batch observe scatter into the jitted train
+    # step (device-resident SampleState, 1 host sync/epoch). False forces
+    # the legacy per-batch host observe() path — kept for the differential
+    # parity test; both paths are bit-identical.
+    fused_observe: bool = True
 
 
 @dataclasses.dataclass
@@ -69,6 +74,10 @@ class EpochStats:
     bwd_samples: int
     lr: float
     wall_time: float
+    # SampleState host round trips in the epoch's plan + batch loop (the
+    # quantity the device-resident selection engine minimises; step-D
+    # refresh is epoch-boundary work accounted in fwd_samples instead).
+    host_syncs: int = 0
 
 
 class Trainer:
@@ -112,20 +121,31 @@ class Trainer:
 
     def _jit_steps(self):
         opt, loss_fn, compress = self.opt, self.loss_fn, self.cfg.grad_compression
+        # Fused observe: the strategy's per-batch bookkeeping scatter runs
+        # inside the jitted train step, so SampleState never bounces to the
+        # host mid-epoch. Requires the strategy to expose device state.
+        fuse = (self.strategy.fused_observe
+                if self.cfg.fused_observe
+                and self.strategy.get_device_state() is not None else None)
+        self._fuse = fuse
 
-        def train_step(params, opt_state, ef, batch, lr):
+        def train_step(params, opt_state, ef, sstate, batch, indices, epoch,
+                       lr):
             (scalar, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch)
             if compress:
                 grads, ef = compress_grads(grads, ef)
             params, opt_state = opt.update(grads, opt_state, params, lr)
-            return params, opt_state, ef, scalar, metrics
+            if fuse is not None:
+                lv, pa, pc = metrics
+                sstate = fuse(sstate, indices, lv, pa, pc, epoch)
+            return params, opt_state, ef, sstate, scalar, metrics
 
         def eval_step(params, batch):
             _, metrics = loss_fn(params, batch)
             return metrics
 
-        self._train_step = jax.jit(train_step, donate_argnums=(0, 1, 2))
+        self._train_step = jax.jit(train_step, donate_argnums=(0, 1, 2, 3))
         self._eval_step = jax.jit(eval_step)
 
     # ------------------------------------------------------------------ epochs
@@ -156,25 +176,50 @@ class Trainer:
         lr = float(c.lr(epoch)) * plan.lr_scale
         fwd = bwd = 0
         losses = []
-        for idx, batch in self.pipeline.batches(indices):
-            fwd += len(idx)
-            if self.strategy.needs_batch_loss:
-                # forward-only pass for selection, then masked backward
-                lv, _, _ = self._eval_step(self.params, batch)
-                weight = self.strategy.select_batch(idx, np.asarray(lv))
-                bwd += int(np.count_nonzero(weight))
-            else:
-                weight = self.strategy.batch_weights(idx)
-                bwd += len(idx)
-            b = dict(batch)
-            if weight is not None:
-                b["weight"] = jnp.asarray(weight, jnp.float32)
-            self.params, self.opt_state, self.ef_state, scalar, metrics = (
-                self._train_step(self.params, self.opt_state, self.ef_state,
-                                 b, lr))
-            losses.append(float(scalar))
-            lv, pa, pc = metrics
-            self.strategy.observe(idx, lv, pa, pc, epoch)
+        # Fused path: thread the strategy's device state through the jitted
+        # step for the whole epoch; hand it back only at the epoch boundary.
+        fuse = self._fuse
+        dev_state = self.strategy.get_device_state() if fuse else None
+        # Strategies that don't override observe() (e.g. baseline) keep no
+        # per-sample state, so their no-op observe is not a host round trip.
+        observes = type(self.strategy).observe is not SampleStrategy.observe
+        loop_syncs = 0
+        epoch_dev = jnp.int32(epoch)
+        try:
+            for idx, batch in self.pipeline.batches(indices):
+                fwd += len(idx)
+                if self.strategy.needs_batch_loss:
+                    # forward-only pass for selection, then masked backward
+                    lv, _, _ = self._eval_step(self.params, batch)
+                    weight = self.strategy.select_batch(idx, np.asarray(lv))
+                    # None = uniform: the whole batch still takes the
+                    # backward pass, so it must count —
+                    # np.count_nonzero(None) == 0 would silently zero out
+                    # the paper's work accounting.
+                    bwd += (len(idx) if weight is None
+                            else int(np.count_nonzero(weight)))
+                else:
+                    weight = self.strategy.batch_weights(idx)
+                    bwd += len(idx)
+                b = dict(batch)
+                if weight is not None:
+                    b["weight"] = jnp.asarray(weight, jnp.float32)
+                (self.params, self.opt_state, self.ef_state, dev_state,
+                 scalar, metrics) = self._train_step(
+                    self.params, self.opt_state, self.ef_state, dev_state, b,
+                    jnp.asarray(idx), epoch_dev, lr)
+                losses.append(float(scalar))
+                if fuse is None:
+                    lv, pa, pc = metrics
+                    self.strategy.observe(idx, lv, pa, pc, epoch)
+                    loop_syncs += int(observes)
+        finally:
+            # The train step donates dev_state, so mid-epoch the strategy's
+            # own reference may point at deleted buffers — always hand back
+            # the latest live state, even on a crash, so checkpoint-on-fault
+            # (save_checkpoint -> strategy.state_dict) stays valid.
+            if fuse is not None:
+                self.strategy.set_device_state(dev_state)
         if plan.needs_refresh:
             # KAKURENBO step D: forward-only refresh of the hidden list.
             def fwd_fn(idx):
@@ -188,7 +233,8 @@ class Trainer:
             test_acc=acc,
             hidden_fraction=plan.hidden_fraction,
             fwd_samples=fwd, bwd_samples=bwd, lr=lr,
-            wall_time=time.perf_counter() - t0)
+            wall_time=time.perf_counter() - t0,
+            host_syncs=plan.host_syncs + loop_syncs)
         self.history.append(stats)
         self.epoch = epoch + 1
         if (c.checkpoint_dir and c.checkpoint_every

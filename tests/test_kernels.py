@@ -9,7 +9,8 @@ import pytest
 from repro.kernels import ops
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ref import (flash_attention_ref, histogram_ref,
-                               loss_confidence_ref)
+                               loss_confidence_ref, minmax_ref)
+from repro.kernels.threshold_select import BIG, histogram_with_range
 from repro.models.ssm import ssd_scan_ref
 
 
@@ -99,6 +100,40 @@ def test_histogram(n, bins, rng):
     h2 = ops.loss_histogram(loss, valid, lo, hi, bins)
     assert bool((h1 == h2).all())
     assert int(h2.sum()) == int(valid.sum())
+
+
+@pytest.mark.parametrize("n", [1000, 2048, 3000])
+def test_minmax(n, rng):
+    """The range pass matches the masked-reduction oracle exactly."""
+    loss = jnp.asarray(rng.normal(size=(n,)) * 5, jnp.float32)
+    valid = jnp.asarray(rng.random(n) < 0.8)
+    lo_ref, hi_ref = minmax_ref(loss, valid)
+    lo, hi = ops.loss_minmax(loss, valid)
+    assert float(lo) == float(lo_ref)
+    assert float(hi) == float(hi_ref)
+
+
+def test_minmax_all_invalid(rng):
+    """No valid samples -> the raw [BIG, -BIG] sentinels (callers fold)."""
+    loss = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    lo, hi = ops.loss_minmax(loss, jnp.zeros(256, bool))
+    assert float(lo) == pytest.approx(BIG, rel=1e-6)
+    assert float(hi) == pytest.approx(-BIG, rel=1e-6)
+
+
+def test_histogram_with_range_fused(rng):
+    """Range pass + histogram pass chained on device == two-step oracle."""
+    n, bins = 4096, 512
+    loss = jnp.asarray(rng.exponential(1.0, n), jnp.float32)
+    valid = jnp.asarray(rng.random(n) < 0.7)
+    hist, lo_raw, hi_raw = histogram_with_range(loss, valid, bins=bins)
+    lo_ref, hi_ref = minmax_ref(loss, valid)
+    assert float(lo_raw) == float(lo_ref)
+    assert float(hi_raw) == float(hi_ref)
+    h_ref = histogram_ref(loss, valid, jnp.minimum(lo_raw, hi_raw), hi_raw,
+                          bins)
+    assert bool((hist == h_ref).all())
+    assert int(hist.sum()) == int(valid.sum())
 
 
 def test_model_metrics_match_kernel(rng):

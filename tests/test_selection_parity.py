@@ -1,0 +1,235 @@
+"""Differential parity harness over every hidden-selection implementation.
+
+One parametrized suite drives ``sort`` (paper O(N log N)), ``histogram``
+(jnp O(N) CDF) and ``histogram_pallas`` (Pallas kernels, interpret mode on
+CPU CI) through the same states and asserts they agree:
+
+  * hidden counts match within the *documented* slack — the population of
+    the boundary histogram bin(s) — and honour the F ceiling,
+  * never-seen samples are never hidden,
+  * the move-back rule is applied identically (mask(mb) == mask(no-mb) &
+    confident-correct) by every method,
+  * DropTop hides the highest-loss tail on every method (regression for the
+    silently-ignored ``drop_top_fraction`` on the histogram path),
+  * the two histogram implementations are BIT-identical (same binning
+    formula, exact integer counts), including degenerate inputs:
+    all-invalid state, constant loss (lo == hi), N not divisible by the
+    kernel block size, and F in {0, large}.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    HIST_BINS, SELECTION_METHODS, init_sample_state, scatter_observations,
+    select_hidden,
+)
+
+HIST_METHODS = ("histogram", "histogram_pallas")
+TAU = 0.7
+
+# (name, N) — N=3000 is deliberately not a multiple of the kernels'
+# 2048-sample block; N=8 exercises tiny inputs.
+CASES = {
+    "exp": 1000,
+    "uniform": 3000,
+    "constant": 256,     # lo == hi: every sample lands in one bin
+    "two_level": 512,    # exactly two populated bins
+    "tiny": 8,
+}
+
+
+def _make_state(case: str, n: int, eligible: str = "all"):
+    """eligible: 'all' | 'mixed' (random PA/PC) | 'none' (never observed)."""
+    r = np.random.default_rng(hash(case) % (2**31))
+    if case == "exp":
+        losses = r.exponential(1.0, n).astype(np.float32)
+    elif case == "uniform":
+        losses = r.uniform(0.0, 10.0, n).astype(np.float32)
+    elif case == "constant":
+        losses = np.full(n, 3.5, np.float32)
+    elif case == "two_level":
+        losses = np.where(np.arange(n) % 2 == 0, 1.0, 2.0).astype(np.float32)
+    elif case == "tiny":
+        losses = np.linspace(0, 1, n).astype(np.float32)
+    else:
+        raise ValueError(case)
+    s = init_sample_state(n)
+    if eligible == "none":
+        return s, losses
+    if eligible == "all":
+        pa = np.ones(n, bool)
+        pc = np.ones(n, np.float32)
+    else:
+        pa = r.random(n) < 0.6
+        pc = r.random(n).astype(np.float32)
+    s = scatter_observations(s, jnp.arange(n), jnp.asarray(losses),
+                             jnp.asarray(pa), jnp.asarray(pc), 0)
+    return s, losses
+
+
+def _boundary_slack(losses: np.ndarray, frac: float, top: bool = False,
+                    bins: int = HIST_BINS) -> int:
+    """The documented count slack of the histogram methods vs sort: the CDF
+    walk cannot split the boundary bin, so counts may differ by up to that
+    bin's population (a 3-bin window absorbs f32-vs-f64 edge rounding)."""
+    lo, hi = float(losses.min()), float(losses.max())
+    span = max(hi - lo, 1e-12)
+    idx = np.clip(((losses - lo) / span * bins).astype(np.int64), 0, bins - 1)
+    hist = np.bincount(idx, minlength=bins)
+    k = int(np.floor(frac * len(losses)))
+    cdf = np.cumsum(hist[::-1] if top else hist)
+    b = int(np.clip(np.searchsorted(cdf, k, side="left"), 0, bins - 1))
+    if top:
+        b = bins - 1 - b
+    return int(hist[max(b - 1, 0): b + 2].sum())
+
+
+def _hide(state, frac, method, **kw):
+    return np.asarray(select_hidden(state, frac, method=method, **kw))
+
+
+# ---------------------------------------------------------------------------
+# Cross-method agreement
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+@pytest.mark.parametrize("frac", [0.0, 0.3, 0.7])
+def test_methods_agree_on_hidden_count(case, frac):
+    n = CASES[case]
+    s, losses = _make_state(case, n, eligible="all")
+    counts = {m: int(_hide(s, frac, m).sum()) for m in SELECTION_METHODS}
+    slack = _boundary_slack(losses, frac)
+    for m in HIST_METHODS:
+        assert abs(counts[m] - counts["sort"]) <= slack, (case, frac, counts)
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+@pytest.mark.parametrize("frac", [0.0, 0.3, 0.7])
+def test_histogram_pallas_bit_identical_to_histogram(case, frac):
+    """The kernel path shares the threshold math with the jnp path, so the
+    masks must be equal element-for-element — no tolerance."""
+    s, _ = _make_state(case, CASES[case], eligible="mixed")
+    np.testing.assert_array_equal(_hide(s, frac, "histogram"),
+                                  _hide(s, frac, "histogram_pallas"))
+
+
+# ---------------------------------------------------------------------------
+# Shared invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", SELECTION_METHODS)
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_f_ceiling(method, case):
+    n = CASES[case]
+    frac = 0.4
+    s, losses = _make_state(case, n, eligible="all")
+    limit = int(np.floor(frac * n))
+    slack = 0 if method == "sort" else _boundary_slack(losses, frac)
+    assert _hide(s, frac, method).sum() <= limit + slack
+
+
+@pytest.mark.parametrize("method", SELECTION_METHODS)
+def test_never_seen_never_hidden(method):
+    s, _ = _make_state("exp", 1000, eligible="none")
+    assert _hide(s, 0.5, method).sum() == 0
+    # partially observed: the unobserved half must stay visible
+    n = 1000
+    r = np.random.default_rng(3)
+    seen_idx = np.sort(r.choice(n, n // 2, replace=False))
+    s = init_sample_state(n)
+    s = scatter_observations(
+        s, jnp.asarray(seen_idx),
+        jnp.asarray(r.exponential(1.0, n // 2), jnp.float32),
+        jnp.ones(n // 2, bool), jnp.ones(n // 2, jnp.float32), 0)
+    hidden = _hide(s, 0.5, method)
+    unseen = np.ones(n, bool)
+    unseen[seen_idx] = False
+    assert not hidden[unseen].any()
+
+
+@pytest.mark.parametrize("method", SELECTION_METHODS)
+@pytest.mark.parametrize("case", ["exp", "uniform", "tiny"])
+def test_moveback_applied_identically(method, case):
+    """mask(moveback) == mask(no-moveback) & confident-correct, for every
+    method: move-back is a pure eligibility filter on the same candidates."""
+    n = CASES[case]
+    s, _ = _make_state(case, n, eligible="mixed")
+    cc = (np.asarray(s.pa) & (np.asarray(s.pc) >= TAU)
+          & (np.asarray(s.seen) >= 0))
+    h_mb = _hide(s, 0.5, method, tau=TAU, moveback=True)
+    h_free = _hide(s, 0.5, method, tau=TAU, moveback=False)
+    np.testing.assert_array_equal(h_mb, h_free & cc)
+    assert np.all(cc[h_mb])  # hidden => confident-correct
+
+
+# ---------------------------------------------------------------------------
+# DropTop (regression: the histogram path used to ignore drop_top_fraction)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", SELECTION_METHODS)
+def test_droptop_hides_highest_loss_tail(method):
+    n = 1024
+    s, losses = _make_state("uniform", n, eligible="all")
+    frac, top = 0.2, 0.05
+    h = _hide(s, frac, method, drop_top_fraction=top)
+    h_plain = _hide(s, frac, method)
+    num_top = int(np.floor(top * n))
+    slack = 0 if method == "sort" else _boundary_slack(losses, top, top=True)
+    extra = int(h.sum()) - int(h_plain.sum())
+    assert abs(extra - num_top) <= slack
+    # the extra hidden samples are exactly a top-loss tail
+    tail = h & ~h_plain
+    if tail.any():
+        assert losses[tail].min() >= np.partition(
+            losses, n - num_top - slack - 1)[n - num_top - slack - 1]
+    assert h[np.argmax(losses)]  # the hardest sample is dropped
+
+
+@pytest.mark.parametrize("frac", [0.0, 0.2])
+def test_droptop_methods_agree_with_never_seen(frac):
+    """Regression: never-seen sentinel losses must not occupy sort's
+    top-rank window — with half the dataset unobserved, all methods still
+    drop ~the same number of *seen* top-loss samples."""
+    n = 1000
+    r = np.random.default_rng(11)
+    losses = r.uniform(0, 1, n).astype(np.float32)
+    seen_idx = np.sort(r.choice(n, n // 2, replace=False))
+    s = init_sample_state(n)
+    s = scatter_observations(
+        s, jnp.asarray(seen_idx), jnp.asarray(losses[seen_idx]),
+        jnp.ones(n // 2, bool), jnp.ones(n // 2, jnp.float32), 0)
+    counts = {m: int(_hide(s, frac, m, drop_top_fraction=0.1).sum())
+              for m in SELECTION_METHODS}
+    # both tails carry boundary-bin slack; fractions are relative to the
+    # 500 *seen* losses the histogram actually spans (0.1/frac of N=1000)
+    seen_losses = losses[seen_idx]
+    slack = (_boundary_slack(seen_losses, 0.2, top=True)
+             + _boundary_slack(seen_losses, 2 * frac, top=False))
+    for m in HIST_METHODS:
+        assert abs(counts[m] - counts["sort"]) <= slack, counts
+    # sort actually drops a top tail (used to drop ~0: the window was
+    # filled by never-seen sentinels and then masked away)
+    assert counts["sort"] >= int(0.1 * n) - slack
+
+
+@pytest.mark.parametrize("method", SELECTION_METHODS)
+def test_droptop_exempts_never_seen(method):
+    """DropTop ignores move-back but must not hide never-seen samples."""
+    n = 512
+    r = np.random.default_rng(7)
+    losses = r.uniform(0, 1, n).astype(np.float32)
+    top_half = np.argsort(losses)[n // 2:]
+    seen_idx = np.setdiff1d(np.arange(n), top_half[:50])  # 50 top unseen
+    s = init_sample_state(n)
+    s = scatter_observations(
+        s, jnp.asarray(seen_idx), jnp.asarray(losses[seen_idx]),
+        jnp.ones(len(seen_idx), bool), jnp.ones(len(seen_idx), jnp.float32), 0)
+    h = _hide(s, 0.0, method, drop_top_fraction=0.3)
+    assert not h[top_half[:50]].any()
+    assert h.sum() > 0  # but seen top-loss samples are dropped

@@ -20,7 +20,8 @@ from repro.train.fault import StragglerMonitor, rescale_plan, run_with_restarts
 CFG_MODEL = cnn.CNNConfig(image_size=8, widths=(8,), hidden=16)
 
 
-def _mk_trainer(tmp_path, strategy="kakurenbo", epochs=4, ds=None, seed=0):
+def _mk_trainer(tmp_path, strategy="kakurenbo", epochs=4, ds=None, seed=0,
+                fused=True, strategy_obj=None):
     ds = ds or SyntheticClassification(num_samples=256, image_size=8, seed=0)
 
     def init_params(rng):
@@ -38,8 +39,10 @@ def _mk_trainer(tmp_path, strategy="kakurenbo", epochs=4, ds=None, seed=0):
         lr=LRSchedule(0.05, "cosine", epochs, 1),
         kakurenbo=KakurenboConfig(max_fraction=0.3,
                                   fraction_milestones=(0, 2, 3, 4)),
-        checkpoint_dir=str(tmp_path / "ckpt"), checkpoint_every=1, seed=seed)
-    return Trainer(tc, init_params, loss_fn, ds, ds.test_split(64))
+        checkpoint_dir=str(tmp_path / "ckpt"), checkpoint_every=1, seed=seed,
+        fused_observe=fused)
+    return Trainer(tc, init_params, loss_fn, ds, ds.test_split(64),
+                   strategy=strategy_obj)
 
 
 def test_checkpoint_restart_bit_exact(tmp_path):
@@ -65,6 +68,76 @@ def test_checkpoint_restart_bit_exact(tmp_path):
     # sampler state also restored + advanced identically
     np.testing.assert_array_equal(np.asarray(tr_ref.sampler.state.loss),
                                   np.asarray(tr2.sampler.state.loss))
+
+
+def test_fused_observe_bit_identical_to_host_path(tmp_path):
+    """The device-resident engine (observe scatter fused into the jitted
+    train step, one SampleState host sync per epoch) must reproduce the
+    per-batch host observe() path bit-for-bit over a seeded 3-epoch run:
+    same hidden sets, same lagging state, same params."""
+    tr_fused = _mk_trainer(tmp_path / "fused", epochs=3)
+    tr_host = _mk_trainer(tmp_path / "host", epochs=3, fused=False)
+    hist_fused = tr_fused.run(3)
+    hist_host = tr_host.run(3)
+
+    for a, b in zip(jax.tree.leaves(tr_fused.params),
+                    jax.tree.leaves(tr_host.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for field in ("hidden", "loss", "pa", "pc", "seen"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(tr_fused.sampler.state, field)),
+            np.asarray(getattr(tr_host.sampler.state, field)), err_msg=field)
+
+    # ...and the engine's point: <= 1 SampleState host sync per epoch in the
+    # fused plan+batch loop, vs 1 + num_batches on the legacy path.
+    assert all(s.host_syncs == 1 for s in hist_fused)
+    assert all(s.host_syncs > 1 for s in hist_host)
+    # identical work accounting either way
+    assert ([(s.fwd_samples, s.bwd_samples) for s in hist_fused]
+            == [(s.fwd_samples, s.bwd_samples) for s in hist_host])
+
+
+def test_resume_preserves_epoch_permutation(tmp_path):
+    """A kakurenbo run interrupted mid-training must resume with the exact
+    epoch permutation and hidden set the uninterrupted run would have drawn:
+    the jitted plan step's device RNG key is checkpointed bit-exactly."""
+    tr_ref = _mk_trainer(tmp_path)
+    tr_ref.run(2)  # checkpoints at every epoch
+
+    tr_res = _mk_trainer(tmp_path, seed=99)  # wrong seed: restore must win
+    assert tr_res.restore_latest()
+    assert tr_res.epoch == 2
+
+    plan_ref = tr_ref.strategy.plan(2)
+    plan_res = tr_res.strategy.plan(2)
+    np.testing.assert_array_equal(plan_ref.visible_indices,
+                                  plan_res.visible_indices)
+    np.testing.assert_array_equal(plan_ref.hidden_indices,
+                                  plan_res.hidden_indices)
+    assert plan_ref.lr_scale == plan_res.lr_scale
+    np.testing.assert_array_equal(np.asarray(tr_ref.sampler.state.hidden),
+                                  np.asarray(tr_res.sampler.state.hidden))
+
+
+def test_select_batch_none_counts_full_batch(tmp_path):
+    """Regression: a needs_batch_loss strategy whose select_batch returns
+    None (documented as "uniform") must count the whole batch as backward
+    work — np.count_nonzero(None) == 0 used to zero out bwd_samples."""
+    from repro.core.strategy import EpochPlan, SampleStrategy
+
+    class UniformSB(SampleStrategy):
+        needs_batch_loss = True
+
+        def plan(self, epoch):
+            return EpochPlan(epoch=epoch,
+                             visible_indices=np.arange(self.num_samples))
+        # select_batch inherits the base None-returning implementation
+
+    ds = SyntheticClassification(num_samples=256, image_size=8, seed=0)
+    tr = _mk_trainer(tmp_path, ds=ds, epochs=1,
+                     strategy_obj=UniformSB(ds.num_samples))
+    stats = tr.run_epoch(0)
+    assert stats.bwd_samples == stats.fwd_samples == 256
 
 
 def test_checkpoint_integrity_detects_corruption(tmp_path):
