@@ -12,11 +12,28 @@ epoch through both observation paths and counting SampleState host round
 trips: legacy per-batch ``observe()`` pays batches+1, the fused path
 (scatter inside the jitted train step) pays exactly 1.
 
+``--mesh`` switches to the mesh-sharded engine: an 8-device ``("data",)``
+mesh (host-simulated; the flag is injected before jax initialises), the
+SampleState row-sharded, and the cross-shard plan step — shard_map'd
+histogram + O(bins) psum for the histogram methods, global GSPMD argsort
+for ``sort``.  Emits sharded plan time and the per-epoch host-sync count
+(still exactly 1).  Numbers are recorded in ``docs/benchmarks.md``.
+
 Emits one ``BENCH {json}`` line per measurement (the perf-trajectory seed)
 alongside the legacy CSV rows.
 """
+import argparse
 import json
+import os
+import sys
 import time
+
+# Must be set before jax picks a backend: --mesh simulates 8 host devices.
+if "--mesh" in sys.argv:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +43,7 @@ from repro.core import (
     KakurenboConfig, KakurenboSampler, SELECTION_METHODS, init_sample_state,
     scatter_observations, select_hidden,
 )
+from repro.dist.sharding import ParallelCtx
 from repro.launch.train import plan_summary
 from benchmarks.common import csv_row
 
@@ -48,10 +66,15 @@ def _observed_state(n: int, seed: int = 0):
         jnp.ones(n, bool), jnp.full(n, 0.9, jnp.float32), 0)
 
 
-def _plan_time_us(n: int, method: str, iters: int = 5) -> float:
-    """Full epoch plan step (selection + shuffle + the 1 host sync)."""
-    ks = KakurenboSampler(n, KakurenboConfig(selection=method))
-    ks.state = _observed_state(n)
+def _plan_time_us(n: int, method: str, iters: int = 5,
+                  ctx: ParallelCtx | None = None) -> float:
+    """Full epoch plan step (selection + shuffle + the 1 host sync).
+
+    With a mesh ``ctx`` this is the cross-shard plan on a row-sharded
+    SampleState (``ctx`` defaults to the off-mesh identity context)."""
+    ctx = ctx or ParallelCtx()
+    ks = KakurenboSampler(n, KakurenboConfig(selection=method), ctx=ctx)
+    ks.state = ctx.shard_rows(_observed_state(n))
     ks.begin_epoch(0)  # compile
     t0 = time.perf_counter()
     for e in range(1, iters + 1):
@@ -59,9 +82,13 @@ def _plan_time_us(n: int, method: str, iters: int = 5) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def _epoch_sync_counts(n: int = 4096, batch: int = 256) -> dict:
+def _epoch_sync_counts(n: int = 4096, batch: int = 256,
+                       ctx: ParallelCtx | None = None) -> dict:
     """One simulated epoch through both observation paths; count SampleState
-    host round trips (observe dispatches + the plan materialisation)."""
+    host round trips (observe dispatches + the plan materialisation).
+    Identical accounting on and off the mesh — the sharding must not change
+    the host-sync contract."""
+    ctx = ctx or ParallelCtx()
     r = np.random.default_rng(0)
     batches = [
         (np.arange(i, i + batch),
@@ -70,12 +97,12 @@ def _epoch_sync_counts(n: int = 4096, batch: int = 256) -> dict:
         for i in range(0, n, batch)
     ]
 
-    legacy = KakurenboSampler(n)
+    legacy = KakurenboSampler(n, ctx=ctx)
     for idx, lv, pa, pc in batches:
         legacy.observe(idx, lv, pa, pc, 0)   # host dispatch per batch
     legacy.begin_epoch(1)
 
-    fused = KakurenboSampler(n)
+    fused = KakurenboSampler(n, ctx=ctx)
     step = jax.jit(scatter_observations, donate_argnums=0)
     state = fused.state                      # stays on device all epoch...
     for idx, lv, pa, pc in batches:
@@ -83,10 +110,31 @@ def _epoch_sync_counts(n: int = 4096, batch: int = 256) -> dict:
     fused.state = state                      # ...handed back once
     plan = fused.begin_epoch(1)
 
-    return {"batches": len(batches),
+    return {"batches": len(batches), "devices": ctx.dp_size,
             "host_syncs_legacy": legacy.host_round_trips,
             "host_syncs_fused": fused.host_round_trips,
             "plan": plan_summary(plan)}
+
+
+def mesh_main() -> None:
+    from repro.launch.mesh import data_parallel_ctx
+    ctx = data_parallel_ctx(8)
+    for n in (100_000, 1_000_000):
+        for method in SELECTION_METHODS:
+            if method == "histogram_pallas" and n > 100_000:
+                continue  # interpret-mode kernels: bench the smaller N only
+            plan_us = _plan_time_us(n, method, iters=3, ctx=ctx)
+            note = ("global GSPMD argsort, O(N) gather" if method == "sort"
+                    else "shard_map histogram, O(bins) psum")
+            print(csv_row(f"selection_mesh/{method}_N{n}", plan_us, note))
+            print("BENCH " + json.dumps({
+                "bench": "selection_overhead_mesh", "devices": 8, "n": n,
+                "method": method, "plan_us": round(plan_us, 1)}))
+    sync = _epoch_sync_counts(ctx=ctx)
+    assert sync["host_syncs_fused"] == 1, sync
+    assert sync["host_syncs_legacy"] == sync["batches"] + 1, sync
+    print("BENCH " + json.dumps(
+        {"bench": "sample_state_host_syncs_mesh", **sync}))
 
 
 def main() -> None:
@@ -116,4 +164,9 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", action="store_true",
+                    help="bench the mesh-sharded selection engine on an "
+                         "8-device host-simulated ('data',) mesh")
+    args = ap.parse_args()
+    mesh_main() if args.mesh else main()

@@ -50,10 +50,11 @@ class RandomStrategy(SampleStrategy):
     fused_observe = staticmethod(scatter_observations)
 
     def __init__(self, num_samples: int, config: KakurenboConfig | None = None,
-                 seed: int = 0):
+                 seed: int = 0, ctx=None):
         super().__init__(num_samples, config, seed)
         self._inner = KakurenboSampler(
-            num_samples, dataclasses.replace(config) if config else None, seed)
+            num_samples, dataclasses.replace(config) if config else None, seed,
+            ctx=ctx)
         self._rng = np.random.default_rng(seed + 1)
 
     @property
@@ -70,12 +71,12 @@ class RandomStrategy(SampleStrategy):
         """Overwrite the lagging state with iid-uniform 'losses' that are
         always move-back-eligible, so hiding is a pure coin flip."""
         n = self.num_samples
-        self._inner.state = dataclasses.replace(
+        self._inner.state = self._inner.ctx.shard_rows(dataclasses.replace(
             self._inner.state,
             loss=jnp.asarray(self._rng.random(n), jnp.float32),
             pa=jnp.ones((n,), bool),
             pc=jnp.ones((n,), jnp.float32),
-            seen=jnp.zeros((n,), jnp.int32))
+            seen=jnp.zeros((n,), jnp.int32)))
 
     def plan(self, epoch: int) -> EpochPlan:
         self._randomize_importance()
@@ -95,6 +96,7 @@ class RandomStrategy(SampleStrategy):
                 "host": {"rng": rng_state(self._rng)}}
 
     def load_state_dict(self, state: dict) -> None:
-        self._inner.state = jax.tree.map(jnp.asarray, state["arrays"]["state"])
+        self._inner.state = self._inner.ctx.shard_rows(
+            jax.tree.map(jnp.asarray, state["arrays"]["state"]))
         self._inner.load_key_data(state["arrays"]["inner_key"])
         set_rng_state(self._rng, state["host"]["rng"])

@@ -19,6 +19,17 @@ checkpointable jax PRNG key, and per-batch observation is fused into the
 trainer's jitted train step (``KakurenboStrategy.fused_observe``).
 ``SampleState`` therefore crosses the host boundary exactly once per epoch:
 the ``jax.device_get`` that materialises the EpochPlan's index lists.
+
+Mesh sharding: given a ``ParallelCtx`` with a ``("data",)`` mesh
+(``TrainConfig.mesh_shape``), ``SampleState`` is row-sharded over the data
+axis and the plan step becomes a *cross-shard* plan: the histogram selection
+methods run under shard_map — each shard histograms its own rows, the
+histograms are psum'd (O(bins) communication) and every shard derives the
+same global threshold — while ``"sort"`` falls back to a global GSPMD
+argsort (the O(N) gather the paper's own method costs).  The epoch shuffle
+uses the replicated device PRNG key, so the permutation — and with it the
+hide/move-back masks and the batch order — is bit-identical across mesh
+sizes (enforced by ``tests/test_mesh_trainer.py``).
 """
 from __future__ import annotations
 
@@ -29,11 +40,13 @@ from typing import Callable, Iterator
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import selection as sel
 from repro.core.schedule import FractionSchedule, kakurenbo_lr
 from repro.core.state import SampleState, init_sample_state, scatter_observations, with_hidden
 from repro.core.strategy import EpochPlan, SampleStrategy, register_strategy
+from repro.dist.sharding import ParallelCtx, shard_map_compat
 
 
 @dataclasses.dataclass
@@ -53,18 +66,41 @@ class KakurenboConfig:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("method", "tau", "drop_top", "moveback", "adjust_lr"))
+    static_argnames=("method", "tau", "drop_top", "moveback", "adjust_lr",
+                     "mesh"))
 def _plan_step(state: SampleState, key: jax.Array, f_max: jax.Array, *,
                method: str, tau: float, drop_top: float, moveback: bool,
-               adjust_lr: bool):
+               adjust_lr: bool, mesh=None):
     """The entire epoch plan as one device-resident step.
 
     Selection + move-back + the visible/hidden split + the epoch shuffle all
-    happen on device; returns (hidden mask, permuted index order with the
-    visible set first, hidden count, F*, Eq. 8 LR factor).
+    happen on device; returns (hidden mask, moved-back mask, permuted index
+    order with the visible set first, hidden count, F*, Eq. 8 LR factor).
+
+    With ``mesh`` (a ``("data",)`` mesh; ``state`` row-sharded over it) this
+    is a *cross-shard* plan: the histogram methods run their selection under
+    shard_map — per-shard histograms psum'd into a globally consistent
+    threshold, O(bins) communication — while ``"sort"`` runs as a global
+    GSPMD argsort (O(N) gather, the paper method's own cost).  The shuffle
+    key is replicated, so masks and batch order are identical for every mesh
+    size, ``(1,)`` included.
     """
-    hidden = sel.select_hidden(state, f_max, method=method, tau=tau,
-                               drop_top_fraction=drop_top, moveback=moveback)
+    if mesh is not None and method in ("histogram", "histogram_pallas"):
+        def local_select(st, fm):
+            return sel.select_hidden_histogram(
+                st, fm, tau=tau, axis_names=("data",),
+                drop_top_fraction=drop_top, moveback=moveback,
+                use_kernel=(method == "histogram_pallas"))
+
+        hidden = shard_map_compat(
+            local_select, mesh=mesh, in_specs=(P("data"), P()),
+            out_specs=P("data"))(state, f_max)
+    else:
+        hidden = sel.select_hidden(state, f_max, method=method, tau=tau,
+                                   drop_top_fraction=drop_top,
+                                   moveback=moveback)
+    # Move-back set (Sec. 3.1): hidden last epoch, visible again this epoch.
+    moved_back = state.hidden & ~hidden
     n = state.num_samples
     perm = jax.random.permutation(key, n)
     # Stable-sort the random permutation by hiddenness: visible indices come
@@ -77,17 +113,26 @@ def _plan_step(state: SampleState, key: jax.Array, f_max: jax.Array, *,
         lr_scale = kakurenbo_lr(jnp.float32(1.0), f_star)
     else:
         lr_scale = jnp.float32(1.0)
-    return hidden, order, num_hidden, f_star, lr_scale
+    return hidden, moved_back, order, num_hidden, f_star, lr_scale
 
 
 class KakurenboSampler:
     """Owns SampleState + epoch planning. Host-side glue; math is jitted."""
 
     def __init__(self, num_samples: int, config: KakurenboConfig | None = None,
-                 seed: int = 0):
+                 seed: int = 0, ctx: ParallelCtx | None = None):
         self.config = config or KakurenboConfig()
-        self.state: SampleState = init_sample_state(num_samples)
-        self._key = jax.random.key(seed)
+        self.ctx = ctx or ParallelCtx()
+        if self.ctx.mesh is not None and num_samples % self.ctx.dp_size:
+            raise ValueError(
+                f"num_samples={num_samples} must be a multiple of the "
+                f"data-parallel degree {self.ctx.dp_size} to row-shard "
+                "SampleState")
+        # Row-sharded over the data axes under a mesh; plain device arrays
+        # otherwise (shard_rows is the identity with no mesh).
+        self.state: SampleState = self.ctx.shard_rows(
+            init_sample_state(num_samples))
+        self._key = self.ctx.replicate(jax.random.key(seed))
         # Host round trips involving SampleState: host-dispatched observe
         # scatters + per-epoch plan materialisations. The fused trainer path
         # keeps this at 1/epoch; the legacy path pays 1/batch on top.
@@ -106,14 +151,15 @@ class KakurenboSampler:
         c = self.config
         f_max = float(self._fraction_schedule(epoch))
         self._key, sub = jax.random.split(self._key)
-        hidden, order, num_hidden, f_star, lr_scale = _plan_step(
+        hidden, moved_back, order, num_hidden, f_star, lr_scale = _plan_step(
             self.state, sub, jnp.float32(f_max), method=c.selection,
             tau=c.tau, drop_top=c.drop_top_fraction, moveback=c.moveback,
-            adjust_lr=c.adjust_lr)
+            adjust_lr=c.adjust_lr, mesh=self.ctx.mesh)
         self.state = with_hidden(self.state, hidden)
-        # The single host sync of the epoch: materialise the plan.
-        order_np, nh, f_star, lr_scale = jax.device_get(
-            (order, num_hidden, f_star, lr_scale))
+        # The single host sync of the epoch: materialise the plan (one
+        # device_get for the order, the move-back mask and the scalars).
+        order_np, mb_np, nh, f_star, lr_scale = jax.device_get(
+            (order, moved_back, num_hidden, f_star, lr_scale))
         self.host_round_trips += 1
         n = self.state.num_samples
         nh = int(nh)
@@ -126,6 +172,7 @@ class KakurenboSampler:
             lr_scale=float(lr_scale),
             needs_refresh=nh > 0,
             host_syncs=1,
+            moveback_indices=np.flatnonzero(mb_np),
         )
 
     # -- per-batch bookkeeping ----------------------------------------------
@@ -185,8 +232,8 @@ class KakurenboSampler:
         return jax.random.key_data(self._key)
 
     def load_key_data(self, data) -> None:
-        self._key = jax.random.wrap_key_data(
-            jnp.asarray(data, jnp.uint32), impl="threefry2x32")
+        self._key = self.ctx.replicate(jax.random.wrap_key_data(
+            jnp.asarray(data, jnp.uint32), impl="threefry2x32"))
 
 
 @register_strategy("kakurenbo")
@@ -197,9 +244,9 @@ class KakurenboStrategy(SampleStrategy):
     fused_observe = staticmethod(scatter_observations)
 
     def __init__(self, num_samples: int, config: KakurenboConfig | None = None,
-                 seed: int = 0):
+                 seed: int = 0, ctx: ParallelCtx | None = None):
         super().__init__(num_samples, config, seed)
-        self._inner = KakurenboSampler(num_samples, config, seed)
+        self._inner = KakurenboSampler(num_samples, config, seed, ctx=ctx)
 
     @property
     def state(self) -> SampleState:
@@ -234,5 +281,6 @@ class KakurenboStrategy(SampleStrategy):
                 "host": {"rng_impl": "threefry2x32"}}
 
     def load_state_dict(self, state: dict) -> None:
-        self._inner.state = jax.tree.map(jnp.asarray, state["arrays"]["state"])
+        self._inner.state = self._inner.ctx.shard_rows(
+            jax.tree.map(jnp.asarray, state["arrays"]["state"]))
         self._inner.load_key_data(state["arrays"]["rng_key"])

@@ -228,7 +228,13 @@ def select_hidden(
     drop_top_fraction: float = 0.0,
     moveback: bool = True,
 ) -> jax.Array:
-    """Jitted single-host entry point (trainer plan step, tests, examples)."""
+    """Jitted single-device entry point (plan step, tests, examples).
+
+    The mesh plan (``core/kakurenbo.py::_plan_step``) calls
+    ``select_hidden_histogram`` directly under shard_map for the histogram
+    methods (O(bins) psum) and falls back to this global path for
+    ``"sort"`` (GSPMD argsort, O(N) gather).
+    """
     if method == "sort":
         return select_hidden_sort(state, max_fraction, tau, drop_top_fraction,
                                   moveback)

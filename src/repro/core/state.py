@@ -6,7 +6,12 @@ The paper (Sec. 3.4) keeps, for every sample n in the dataset:
   - prediction confidence PC_n (max softmax probability),
 all refreshed from the *training* forward pass for visible samples and from a
 forward-only refresh pass for hidden samples.  Here that state is a pytree of
-``(N,)`` device arrays so it can live sharded over the (pod, data) mesh axes.
+``(N,)`` device arrays; under the mesh-sharded trainer
+(``TrainConfig.mesh_shape``) it lives row-sharded over the ``("data",)``
+mesh axis for the whole run — the scatter below and the selection plan
+(``core/selection.py``) both operate on the sharded layout, and the state
+only crosses the host boundary at the per-epoch ``EpochPlan``
+materialisation (see ``docs/architecture.md``).
 """
 from __future__ import annotations
 
@@ -81,6 +86,14 @@ def scatter_observations(
     per hidden-refresh batch at epoch end.  Duplicate indices are allowed
     (last write wins under XLA scatter semantics, matching the paper where a
     sample is observed at most once per epoch anyway).
+
+    Sharding: the update is scatter-only (no cross-sample reductions), so it
+    is GSPMD-safe — with ``state`` row-sharded over the data axes and
+    ``indices`` arbitrary global ids, the partitioner lowers each scatter to
+    an O(B) gather of the updates plus shard-local writes, which is exactly
+    the schedule a hand-written shard_map version would use.  The mesh
+    trainer relies on this to keep the fused observe inside its jitted step
+    without a second, shard-offset state contract.
     """
     # A forgetting event (FORGET baseline) is a correct -> incorrect flip.
     was_correct = state.prev_correct[indices]

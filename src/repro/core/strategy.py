@@ -33,6 +33,11 @@ Registration mirrors ``configs/registry.py``::
         config_cls, config_field = KakurenboConfig, "kakurenbo"
 
     strategy = make_strategy("kakurenbo", num_samples, cfg, seed)
+
+``docs/adding_a_strategy.md`` walks through building a strategy end-to-end;
+``docs/paper_map.md`` maps every registered strategy (and every Section-3
+concept of the paper) to the code implementing it — CI checks that any new
+``@register_strategy`` name is documented there.
 """
 from __future__ import annotations
 
@@ -46,7 +51,13 @@ import numpy as np
 @dataclasses.dataclass
 class EpochPlan:
     """One epoch's sampling decision, consumable by any training loop
-    (host trainer or the pjit pod-scale step — see ``launch/train.py``)."""
+    (host trainer — single-device or mesh-sharded — or the pjit pod-scale
+    step, see ``launch/train.py``).
+
+    All index arrays are *host* numpy arrays of global sample ids: the plan
+    is the device→host boundary of the selection engine (see
+    ``docs/architecture.md``), materialised once per epoch.
+    """
 
     epoch: int
     visible_indices: np.ndarray            # shuffled training index list
@@ -58,6 +69,11 @@ class EpochPlan:
     needs_refresh: bool = False            # run step-D refresh at epoch end
     reinit_model: bool = False             # restart model from scratch (FORGET)
     host_syncs: int = 0                    # device->host syncs spent planning
+    #: Samples hidden last epoch that the move-back rule (Sec. 3.1) returned
+    #: to this epoch's training list — i.e. ``hidden_{e-1} & ~hidden_e``.
+    #: Sorted global ids; empty for strategies without move-back.
+    moveback_indices: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
 
 
 EvalForward = Callable[[np.ndarray], tuple]   # indices -> (loss, pa, pc)
@@ -69,6 +85,16 @@ class SampleStrategy:
 
     Subclasses override what they need; the defaults are the uniform
     baseline behaviours (no weights, no selection, no end-of-epoch work).
+
+    Residency contract (see ``docs/architecture.md`` for the full picture):
+    a strategy's *decisions* (the ``EpochPlan``) are host numpy; its
+    *per-sample bookkeeping* may be device-resident (``get_device_state`` /
+    ``fused_observe``), in which case it crosses the host boundary only at
+    the epoch plan.  Under the mesh-sharded trainer
+    (``TrainConfig.mesh_shape``) the device state is row-sharded over the
+    ``("data",)`` mesh axis; everything a strategy computes from it must be
+    either shard-local or explicit about its collectives (the KAKURENBO
+    histogram plan psums O(bins) scalars — ``core/selection.py``).
     """
 
     name: str = "?"                        # filled in by @register_strategy
@@ -79,9 +105,14 @@ class SampleStrategy:
     #: Device-resident observation hook: a *pure* function
     #: ``(state_pytree, indices, loss, pa, pc, epoch) -> state_pytree`` the
     #: trainer fuses into its jitted train step, so per-batch bookkeeping
-    #: never leaves the device. None = the trainer falls back to per-batch
-    #: host-side ``observe()`` calls. Strategies exposing this must also
-    #: implement ``get_device_state``/``set_device_state``.
+    #: never leaves the device.  Shapes: ``indices`` (B,) i32 global sample
+    #: ids, ``loss``/``pc`` (B,) f32, ``pa`` (B,) bool, ``epoch`` i32 scalar.
+    #: Must be scatter-only (no cross-sample reductions): the mesh trainer
+    #: runs it on a row-sharded state pytree under GSPMD, where a scatter
+    #: lowers to an O(B) metrics gather + shard-local writes.  None = the
+    #: trainer falls back to per-batch host-side ``observe()`` calls.
+    #: Strategies exposing this must also implement
+    #: ``get_device_state``/``set_device_state``.
     fused_observe: Callable | None = None
 
     def __init__(self, num_samples: int, config: Any = None, seed: int = 0):
@@ -92,27 +123,49 @@ class SampleStrategy:
     # -- epoch boundary ------------------------------------------------------
 
     def prepare(self, epoch: int, feats_fn: FeatsFn | None = None) -> None:
-        """Pre-plan hook; ``feats_fn`` lazily yields (features, labels)."""
+        """Pre-plan hook, called on host before ``plan()`` every epoch.
+
+        ``feats_fn`` lazily yields host ``(features (N, d), labels (N,))``
+        — only Grad-Match consumes it (every R epochs); passing it never
+        forces the feature forward pass by itself.
+        """
 
     def plan(self, epoch: int) -> EpochPlan:
+        """The epoch's sampling decision.  Host-side entry point; any device
+        math inside (selection, shuffle) should batch its results into a
+        single ``jax.device_get`` — the plan *is* the per-epoch host sync
+        (count it in ``EpochPlan.host_syncs``)."""
         raise NotImplementedError
 
     # -- per-batch -----------------------------------------------------------
 
     def observe(self, indices, loss, pa, pc, epoch: int) -> None:
-        """Record lagging (loss, PA, PC) from the training forward pass."""
+        """Record lagging (loss, PA, PC) from the training forward pass.
+
+        Host-dispatched legacy path (one dispatch per batch): ``indices``
+        (B,) global ids, ``loss``/``pc`` (B,) f32, ``pa`` (B,) bool, all
+        device arrays or numpy.  Strategies with ``fused_observe`` only see
+        this from the step-D refresh loop and the legacy-parity trainer path
+        (``TrainConfig.fused_observe=False``).
+        """
 
     def batch_weights(self, indices: np.ndarray) -> np.ndarray | None:
-        """Static per-sample loss weights for this batch (None = uniform)."""
+        """Static per-sample loss weights for this batch (None = uniform).
+
+        Host numpy in, host numpy (B,) f32 out; looked up from plan-time
+        decisions (ISWR unbiasing, InfoBatch 1/(1-r) rescale) — must not
+        touch device state.
+        """
         return None
 
     def select_batch(self, indices: np.ndarray,
                      loss: np.ndarray) -> np.ndarray | None:
         """Forward-then-mask hook: per-sample backward weights (0 = dropped).
 
-        Only consulted when ``needs_batch_loss`` is True; ``loss`` comes
-        from a forward-only pass over the batch.  ``None`` means uniform:
-        every sample in the batch trains with weight 1.
+        Only consulted when ``needs_batch_loss`` is True; ``loss`` is the
+        host (B,) f32 vector from a forward-only pass over the batch.
+        ``None`` means uniform: every sample in the batch trains with
+        weight 1 (and must be counted as backward work).
         """
         return None
 
@@ -122,12 +175,19 @@ class SampleStrategy:
         """Pytree of device arrays consumed/produced by ``fused_observe``.
 
         The trainer fetches this once after ``plan()``, threads it through
-        the jitted train step for the whole epoch, and hands the final value
-        back via ``set_device_state`` — zero per-batch host round trips.
+        the jitted train step for the whole epoch (donated, so the strategy's
+        own reference may die mid-epoch), and hands the final value back via
+        ``set_device_state`` — zero per-batch host round trips.  Leaves are
+        ``(N, ...)`` per-sample arrays; the mesh trainer keeps them
+        row-sharded over the data axes (``ParallelCtx.rows_spec``), so N
+        must be a multiple of the data-parallel degree.
         """
         return None
 
     def set_device_state(self, state) -> None:
+        """Accept the (possibly sharded) state pytree back from the trainer
+        at the epoch boundary (or after a mid-epoch crash — the trainer
+        always hands back the latest live buffers for checkpointing)."""
         raise NotImplementedError(
             f"{type(self).__name__} declares no device-resident state")
 
@@ -135,7 +195,13 @@ class SampleStrategy:
 
     def on_epoch_end(self, plan: EpochPlan, eval_forward: EvalForward,
                      batch_size: int) -> int:
-        """End-of-epoch work; returns extra forward-sample count."""
+        """End-of-epoch work; returns extra forward-sample count.
+
+        ``eval_forward`` maps host (b,) index arrays to device
+        ``(loss, pa, pc)`` — KAKURENBO's step-D hidden refresh drives it in
+        ``batch_size`` slices.  The return value feeds the paper's work
+        accounting (forward-only samples), so padding must be excluded.
+        """
         return 0
 
     # -- checkpoint/restore --------------------------------------------------
@@ -145,6 +211,9 @@ class SampleStrategy:
 
         The arrays part must have a construction-time-stable tree structure
         (it becomes checkpoint leaves); host carries RNG states and flags.
+        Restoring must be bit-exact: a resumed run replays the identical
+        shuffle/selection trajectory (tested by
+        ``test_checkpoint_restart_bit_exact``).
         """
         return {"arrays": {}, "host": {}}
 

@@ -7,8 +7,13 @@ the quantization residual into the next step.  Error feedback makes the
 step's quantization error, so convergence is unaffected while the wire
 format shrinks 4x (the collective would ship int8 + one f32 scale per leaf).
 
-Pure jnp, shape-preserving, jit/pjit-safe — the trainer folds it into the
-jitted train step and the pjit path can apply it before the grad psum.
+Pure jnp, shape-preserving, jit/pjit-safe.  Wired in behind
+``TrainConfig.grad_compression``: the single-device trainer folds it into
+its jitted train step, and the mesh-sharded step applies it to the folded
+(replicated) gradients before the optimizer update — deterministic and
+mesh-size-invariant, so the ``(1,)`` vs ``(8,)`` bit-identity bar holds
+with compression on (``tests/test_mesh_trainer.py``).  The pjit pod path
+can likewise apply it before the grad psum.
 """
 from __future__ import annotations
 

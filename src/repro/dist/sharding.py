@@ -19,6 +19,12 @@ axes — e.g. GQA KV heads that don't divide the tp degree stay replicated
 (models/attention.py relies on this).  With ``mesh=None`` every spec is
 fully replicated and ``cs`` is the identity, so the same model code runs
 single-device (tests) and on the pod mesh unchanged.
+
+Beyond logical specs, ``ParallelCtx`` carries the row-sharding helpers the
+mesh-sharded trainer and the selection engine build on
+(``rows_spec`` / ``shard_rows`` / ``constrain_rows`` / ``replicate``):
+per-sample ``(N, ...)`` state lives split over the data axes, train state
+replicated — all identity off-mesh, so every call site is mesh-agnostic.
 """
 from __future__ import annotations
 
@@ -138,6 +144,43 @@ class ParallelCtx:
         spec = self.spec(*logical, dims=tuple(x.shape))
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(self.mesh, spec))
+
+    # -- row sharding helpers (SampleState / per-sample arrays) --------------
+
+    @property
+    def rows_spec(self) -> P:
+        """PartitionSpec sharding dim 0 over the data axes (``P("data")`` on a
+        pure data mesh; ``P(("pod", "data"))`` on the pod mesh; ``P()`` with
+        no mesh)."""
+        dp = self.dp_axes
+        if not dp:
+            return P()
+        return P(dp[0] if len(dp) == 1 else dp)
+
+    def shard_rows(self, tree: Any) -> Any:
+        """device_put a pytree of ``(N, ...)`` arrays row-sharded over the
+        data axes (e.g. ``SampleState``).  N must be a multiple of
+        ``dp_size``.  Identity with no mesh."""
+        if self.mesh is None:
+            return tree
+        return jax.device_put(tree, NamedSharding(self.mesh, self.rows_spec))
+
+    def replicate(self, tree: Any) -> Any:
+        """device_put a pytree fully replicated over the mesh (params,
+        optimizer state, RNG keys).  Identity with no mesh."""
+        if self.mesh is None:
+            return tree
+        return jax.device_put(tree, NamedSharding(self.mesh, P()))
+
+    def constrain_rows(self, tree: Any) -> Any:
+        """In-jit ``with_sharding_constraint`` pinning dim 0 of every leaf to
+        the data axes — used to keep ``SampleState`` sharded across the fused
+        observe scatter.  Identity with no mesh."""
+        if self.mesh is None:
+            return tree
+        s = NamedSharding(self.mesh, self.rows_spec)
+        return jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(x, s), tree)
 
 
 def _is_logical(x: Any) -> bool:

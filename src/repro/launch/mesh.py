@@ -10,6 +10,31 @@ from __future__ import annotations
 
 import jax
 
+from repro.dist.sharding import ParallelCtx
+
+
+def make_data_mesh(num_devices: int):
+    """Pure data-parallel mesh: ``(num_devices,)`` over the ``("data",)`` axis.
+
+    This is the mesh the host trainer (``train/trainer.py``) runs under when
+    ``TrainConfig.mesh_shape`` is set: params/optimizer state replicated,
+    batches and ``SampleState`` row-sharded over ``"data"``.  On this CPU
+    container the devices are host-simulated
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    """
+    devices = jax.devices()[:num_devices]
+    if len(devices) < num_devices:
+        raise RuntimeError(
+            f"data mesh ({num_devices},) needs {num_devices} devices, have "
+            f"{len(jax.devices())} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={num_devices}")
+    return jax.make_mesh((num_devices,), ("data",), devices=devices)
+
+
+def data_parallel_ctx(num_devices: int) -> ParallelCtx:
+    """ParallelCtx over a fresh ``("data",)`` mesh (trainer + benchmarks)."""
+    return ParallelCtx(mesh=make_data_mesh(num_devices))
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)

@@ -89,6 +89,7 @@ def plan_summary(plan: EpochPlan) -> dict:
         "epoch": int(plan.epoch),
         "visible": int(len(plan.visible_indices)),
         "hidden": int(len(plan.hidden_indices)),
+        "moveback": int(len(plan.moveback_indices)),
         "max_fraction": float(plan.max_fraction),
         "hidden_fraction": float(plan.hidden_fraction),
         "lr_scale": float(plan.lr_scale),

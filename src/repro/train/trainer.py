@@ -1,15 +1,31 @@
 """Epoch-based trainer over the unified ``SampleStrategy`` protocol.
 
 This is the host-side training loop used by the paper-reproduction
-experiments and the end-to-end examples (single process; the pod-scale pjit
-train step lives in ``repro.launch.train`` and shares the same Model API
-and ``EpochPlan`` contract).
+experiments and the end-to-end examples.  It runs in two modes behind one
+config:
+
+- **single-device** (``mesh_shape=None``, the default): the original jitted
+  train/eval steps, unchanged and bit-for-bit compatible with every
+  existing parity suite;
+- **mesh-sharded data-parallel** (``mesh_shape=(D,)``): the train step runs
+  under shard_map over a ``("data",)`` mesh (``launch/mesh.py``), with
+  params/optimizer state replicated, batches and the strategy's
+  ``SampleState`` row-sharded, the fused observe scatter kept sharded via
+  GSPMD, and gradients combined with a *chunk-major deterministic fold*
+  (see ``_jit_steps_mesh``) so losses and parameter trajectories are
+  bit-identical for every mesh size dividing ``grad_chunks``.
+  ``tests/test_mesh_trainer.py`` enforces ``(1,)`` vs ``(8,)`` equality.
+
+(The pod-scale pjit step for the large model configs lives in
+``repro.launch.train`` and shares the same Model API and ``EpochPlan``
+contract.)
 
 The trainer is strategy-agnostic: every selection method — KAKURENBO and
 all baselines — arrives through ``repro.core.make_strategy`` and drives the
 loop exclusively via the protocol (``plan`` / ``observe`` /
 ``batch_weights`` / ``select_batch`` / ``on_epoch_end`` /
-``state_dict``).  Adding a strategy never touches this file.
+``state_dict``).  Adding a strategy never touches this file
+(``docs/adding_a_strategy.md``).
 
 The trainer owns: jitted train/eval steps, LR scheduling (incl. Eq. 8 via
 ``plan.lr_scale``), work accounting (fwd/bwd sample counts — the quantity
@@ -18,12 +34,14 @@ the paper's speedup comes from), checkpoint/restart and failure injection.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.core import (
@@ -32,6 +50,7 @@ from repro.core import (
 )
 from repro.data.pipeline import Pipeline
 from repro.dist.compression import compress_grads, init_error_feedback
+from repro.dist.sharding import ParallelCtx, shard_map_compat
 from repro.optim.optimizers import Optimizer, make_optimizer
 
 
@@ -62,6 +81,17 @@ class TrainConfig:
     # the legacy per-batch host observe() path — kept for the differential
     # parity test; both paths are bit-identical.
     fused_observe: bool = True
+    # Mesh-sharded data-parallel mode: e.g. (8,) trains over a ("data",)
+    # mesh of 8 devices (host-simulated on CPU via
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8). None = the
+    # single-device path, byte-for-byte the pre-mesh trainer.
+    mesh_shape: tuple[int, ...] | None = None
+    # Gradients are reduced as a fold over this many fixed-size batch chunks
+    # regardless of mesh size (each device sums its own contiguous chunk
+    # range in parallel, the fold order is global-chunk-major), which makes
+    # losses/trajectories bit-identical across any mesh size dividing it.
+    # Must divide batch_size.
+    grad_chunks: int = 8
 
 
 @dataclasses.dataclass
@@ -99,18 +129,52 @@ class Trainer:
         self.opt: Optimizer = make_optimizer(cfg.optimizer, **cfg.optimizer_hp)
         self.pipeline = Pipeline(dataset.get, cfg.batch_size)
         self.num_samples = dataset.num_samples
+        self.ctx = self._build_ctx()
         self.rng = jax.random.key(cfg.seed)
         self.params = init_params(self.rng)
         self.opt_state = self.opt.init(self.params)
         self.ef_state = (init_error_feedback(self.params)
                          if cfg.grad_compression else None)
+        self._place()
         self.epoch = 0
         self.history: list[EpochStats] = []
+        # ctx reaches strategies whose constructor declares it (kakurenbo,
+        # random): their SampleState is row-sharded and their plan step runs
+        # the cross-shard selection. Other strategies stay host/uncommitted
+        # and are resharded on the fly by the jitted mesh step.
         self.strategy = strategy or make_strategy(
             cfg.strategy, self.num_samples, cfg=cfg, seed=cfg.seed,
-            num_classes=num_classes, total_epochs=cfg.epochs)
+            num_classes=num_classes, total_epochs=cfg.epochs, ctx=self.ctx)
         self.feats_fn = feats_fn
         self._jit_steps()
+
+    def _build_ctx(self) -> ParallelCtx:
+        c = self.cfg
+        if not c.mesh_shape:
+            return ParallelCtx()
+        from repro.launch.mesh import make_data_mesh
+        num_devices = math.prod(c.mesh_shape)
+        if c.batch_size % c.grad_chunks:
+            raise ValueError(
+                f"batch_size={c.batch_size} must be a multiple of "
+                f"grad_chunks={c.grad_chunks}")
+        if c.grad_chunks % num_devices:
+            raise ValueError(
+                f"grad_chunks={c.grad_chunks} must be a multiple of the mesh "
+                f"size {num_devices} — it is the fixed reduction layout that "
+                "keeps losses bit-identical across mesh sizes")
+        return ParallelCtx(mesh=make_data_mesh(num_devices))
+
+    def _place(self) -> None:
+        """Replicate the train state over the mesh (no-op off-mesh).
+
+        Called whenever params/opt/ef are (re)built on the host default
+        device: init, FORGET's reinit, checkpoint restore.
+        """
+        self.params = self.ctx.replicate(self.params)
+        self.opt_state = self.ctx.replicate(self.opt_state)
+        if self.ef_state is not None:
+            self.ef_state = self.ctx.replicate(self.ef_state)
 
     # Legacy alias: tests and notebooks reach sampler state via tr.sampler.
     @property
@@ -120,7 +184,6 @@ class Trainer:
     # ------------------------------------------------------------------ setup
 
     def _jit_steps(self):
-        opt, loss_fn, compress = self.opt, self.loss_fn, self.cfg.grad_compression
         # Fused observe: the strategy's per-batch bookkeeping scatter runs
         # inside the jitted train step, so SampleState never bounces to the
         # host mid-epoch. Requires the strategy to expose device state.
@@ -128,6 +191,10 @@ class Trainer:
                 if self.cfg.fused_observe
                 and self.strategy.get_device_state() is not None else None)
         self._fuse = fuse
+        if self.ctx.mesh is not None:
+            self._jit_steps_mesh(fuse)
+            return
+        opt, loss_fn, compress = self.opt, self.loss_fn, self.cfg.grad_compression
 
         def train_step(params, opt_state, ef, sstate, batch, indices, epoch,
                        lr):
@@ -148,6 +215,110 @@ class Trainer:
         self._train_step = jax.jit(train_step, donate_argnums=(0, 1, 2, 3))
         self._eval_step = jax.jit(eval_step)
 
+    def _jit_steps_mesh(self, fuse):
+        """Mesh-sharded train/eval steps (``TrainConfig.mesh_shape``).
+
+        The train step is a shard_map over the ``("data",)`` axis wrapped in
+        one jit with the (GSPMD) fused observe scatter:
+
+        - params / optimizer state / EF residuals are replicated; batches,
+          per-sample metrics and ``SampleState`` are row-sharded.
+        - The global batch is viewed as ``grad_chunks`` fixed-size chunks in
+          batch order.  Each device computes per-chunk loss/grads for its
+          contiguous chunk range *in parallel*, then partial results are
+          all-gathered and folded left-to-right in global chunk order.  The
+          reduction tree therefore depends only on ``grad_chunks`` — never
+          on the mesh size — which is what makes losses and parameter
+          trajectories bit-identical between ``(1,)`` and ``(8,)`` meshes
+          (``tests/test_mesh_trainer.py``).  The all-gather costs
+          O(grad_chunks × params) wire bytes versus a psum's O(params); a
+          deployment that prefers speed over cross-mesh reproducibility can
+          swap the fold for ``jax.lax.psum`` without touching anything else.
+        - Error-feedback compression (``grad_compression``) quantizes the
+          folded (replicated) gradients before the optimizer update — the
+          same contract as the single-device step, so it is deterministic
+          and mesh-size-invariant too.
+        - The fused observe runs as a *global* scatter on the row-sharded
+          state after the shard_map core: XLA partitions it into an O(B)
+          metrics gather + shard-local writes (see
+          ``core/state.py::scatter_observations``), and a sharding
+          constraint keeps the state from ever gathering to one device.
+        """
+        ctx = self.ctx
+        mesh = ctx.mesh
+        opt, loss_fn, compress = self.opt, self.loss_fn, self.cfg.grad_compression
+        C = self.cfg.grad_chunks
+        D = ctx.dp_size
+        local_chunks = C // D
+        chunk_rows = self.cfg.batch_size // C
+
+        def local_core(params, opt_state, ef, batch, lr):
+            # Local rows: (B/D, ...) = ``local_chunks`` contiguous global
+            # chunks (chunk-major layout, so device order == chunk order).
+            grads_c, loss_c, mets = [], [], []
+            for i in range(local_chunks):
+                cb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * chunk_rows, chunk_rows, 0), batch)
+                (s, m), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, cb)
+                grads_c.append(g)
+                loss_c.append(s)
+                mets.append(m)
+            # Stack local per-chunk partials, gather across devices, fold in
+            # global chunk order. reshape((C,)+...) turns the gathered
+            # (D, local_chunks, ...) into chunk-major (C, ...).
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *grads_c)
+            gathered = jax.lax.all_gather(
+                (stacked, jnp.stack(loss_c)), "data")
+
+            def fold(x):
+                x = x.reshape((C,) + x.shape[2:])
+                acc = x[0]
+                for j in range(1, C):
+                    acc = acc + x[j]
+                return acc
+
+            grads = jax.tree.map(fold, gathered[0])
+            # Every chunk scalar is a chunk-mean of the user loss_fn, so the
+            # fold/C is exactly the global-batch mean (equal chunk sizes).
+            scalar = fold(gathered[1]) / C
+            grads = jax.tree.map(lambda g: g / C, grads)
+            if compress:
+                grads, ef = compress_grads(grads, ef)
+            params, opt_state = opt.update(grads, opt_state, params, lr)
+            metrics = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *mets)
+            return params, opt_state, ef, scalar, metrics
+
+        core = shard_map_compat(
+            local_core, mesh=mesh,
+            in_specs=(P(), P(), P(), P("data"), P()),
+            out_specs=(P(), P(), P(), P(), P("data")))
+
+        def train_step(params, opt_state, ef, sstate, batch, indices, epoch,
+                       lr):
+            params, opt_state, ef, scalar, metrics = core(
+                params, opt_state, ef, batch, lr)
+            if fuse is not None:
+                lv, pa, pc = metrics
+                sstate = fuse(sstate, indices, lv, pa, pc, epoch)
+                sstate = ctx.constrain_rows(sstate)
+            return params, opt_state, ef, sstate, scalar, metrics
+
+        def eval_step(params, batch):
+            _, metrics = loss_fn(params, batch)
+            return metrics
+
+        self._train_step = jax.jit(train_step, donate_argnums=(0, 1, 2, 3))
+        # Forward-only metrics are per-sample (no cross-sample reductions in
+        # the loss vector), so plain GSPMD over the sharded batch is already
+        # bit-identical across mesh sizes; no chunking needed.
+        self._eval_step = jax.jit(
+            eval_step,
+            in_shardings=(NamedSharding(mesh, P()),
+                          NamedSharding(mesh, P("data"))))
+
     # ------------------------------------------------------------------ epochs
 
     def _collect_feats(self):
@@ -167,6 +338,7 @@ class Trainer:
             # e.g. FORGET: restart training from scratch on the pruned set.
             self.params = self._init_params(self.rng)
             self.opt_state = self.opt.init(self.params)
+            self._place()
         return plan.visible_indices, plan
 
     def run_epoch(self, epoch: int) -> EpochStats:
@@ -269,8 +441,16 @@ class Trainer:
 
     def _ckpt_tree(self, strategy_sd: dict | None = None):
         sd = strategy_sd or self.strategy.state_dict()
-        return {"params": self.params, "opt_state": self.opt_state,
+        tree = {"params": self.params, "opt_state": self.opt_state,
                 "strategy": sd["arrays"]}
+        if self.ef_state is not None:
+            # The error-feedback residual is part of the trajectory: without
+            # it a compressed-gradient restart re-quantizes from zero carry
+            # and silently diverges from the uninterrupted run.  Only added
+            # when compression is on, so uncompressed checkpoints keep the
+            # legacy leaf set.
+            tree["ef"] = self.ef_state
+        return tree
 
     def save_checkpoint(self) -> str | None:
         if not self.cfg.checkpoint_dir:
@@ -306,6 +486,9 @@ class Trainer:
                 "(no 'strategy' metadata) — cannot restore RNG state")
         self.params = tree["params"]
         self.opt_state = tree["opt_state"]
+        if self.ef_state is not None:
+            self.ef_state = tree["ef"]
+        self._place()
         self.strategy.load_state_dict(
             {"arrays": tree["strategy"], "host": meta["strategy"]})
         self.epoch = meta["epoch"]

@@ -1,0 +1,64 @@
+"""Docs lint (also wired as a dedicated CI step).
+
+Two guarantees:
+
+1. every relative markdown link in ``docs/*.md`` and ``README.md`` resolves
+   to a real file — the docs map (architecture / paper_map /
+   adding_a_strategy / benchmarks) must not rot as files move;
+2. every ``@register_strategy`` name is documented in
+   ``docs/paper_map.md`` — adding a strategy without documenting its paper
+   role fails CI (see docs/adding_a_strategy.md).
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# [text](target) — excluding images and in-page anchors; external schemes
+# are skipped below.
+_LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
+
+
+def _doc_files() -> list[Path]:
+    files = sorted((ROOT / "docs").glob("*.md"))
+    assert files, "docs/ subsystem missing"
+    return files + [ROOT / "README.md"]
+
+
+def test_docs_internal_links_resolve():
+    broken = []
+    for md in _doc_files():
+        for m in _LINK.finditer(md.read_text()):
+            target = m.group(1)
+            if "://" in target or target.startswith("mailto:"):
+                continue
+            if not (md.parent / target).exists():
+                broken.append(f"{md.relative_to(ROOT)} -> {target}")
+    assert not broken, "broken internal doc links:\n" + "\n".join(broken)
+
+
+def test_docs_required_pages_exist():
+    for name in ("architecture.md", "paper_map.md", "adding_a_strategy.md",
+                 "benchmarks.md"):
+        assert (ROOT / "docs" / name).exists(), f"docs/{name} missing"
+
+
+def test_every_registered_strategy_documented_in_paper_map():
+    from repro.core.strategy import available_strategies
+
+    text = (ROOT / "docs" / "paper_map.md").read_text()
+    missing = [name for name in available_strategies()
+               if f"`{name}`" not in text]
+    assert not missing, (
+        f"strategies missing from docs/paper_map.md: {missing} — every "
+        "@register_strategy name must be documented there "
+        "(docs/adding_a_strategy.md, step 2)")
+
+
+def test_readme_links_docs():
+    text = (ROOT / "README.md").read_text()
+    for page in ("docs/architecture.md", "docs/paper_map.md",
+                 "docs/adding_a_strategy.md"):
+        assert page in text, f"README must link {page}"
