@@ -5,7 +5,8 @@ are discoverable through the registry (``make_strategy``/``STRATEGIES``);
 the legacy sampler classes remain exported for direct, low-level use.
 """
 from repro.core.state import (  # noqa: F401
-    SampleState, init_sample_state, scatter_observations, with_hidden,
+    SampleState, TrainCarry, init_sample_state, scatter_observations,
+    with_hidden,
 )
 from repro.core.selection import (  # noqa: F401
     select_hidden, select_hidden_sort, select_hidden_histogram,

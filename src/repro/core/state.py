@@ -110,6 +110,29 @@ def scatter_observations(
     )
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainCarry:
+    """The full device-resident train state threaded through a scanned epoch.
+
+    This is the ``lax.scan`` carry of the scanned epoch engine
+    (``train/engines.py``): params, optimizer state, the error-feedback
+    residual (None without compression) and the strategy's ``SampleState``
+    (None for stateless strategies) ride through K train steps per dispatch,
+    and per-step loss scalars come back as the scan's stacked outputs — so
+    the whole block costs one dispatch and the losses one ``device_get`` per
+    epoch.  The host-loop engine threads the same four objects through its
+    per-batch jitted step; sharing the structure is what keeps the two
+    engines' donation/restart contracts identical (a crash between scan
+    blocks leaves a fully live carry to hand back for checkpoint-on-fault).
+    """
+
+    params: Any
+    opt_state: Any
+    ef: Any
+    sstate: Any
+
+
 def with_hidden(state: SampleState, hidden: jax.Array) -> SampleState:
     return dataclasses.replace(state, hidden=hidden)
 

@@ -149,6 +149,27 @@ class SampleStrategy:
         (``TrainConfig.fused_observe=False``).
         """
 
+    @property
+    def supports_scan(self) -> bool:
+        """Can a whole epoch of this strategy run as jitted multi-step scan
+        blocks (``train/engines.py::ScanEpochEngine``) with zero per-batch
+        host work?
+
+        True when the strategy needs nothing from the host between train
+        steps: no forward-then-select flow (``needs_batch_loss``) and no
+        host-side ``observe()`` (either it keeps no per-sample state, or the
+        bookkeeping is expressible as ``fused_observe`` inside the step).
+        ``batch_weights`` does NOT block scanning — it is a plan-time lookup
+        by contract, so the engine pre-gathers every batch's weights into the
+        epoch plan before dispatch.  Strategies that scan must keep these
+        properties in sync with their hooks; the trainer additionally checks
+        that the fused observe is actually active before picking the scanned
+        engine (``TrainConfig.fused_observe=False`` forces the host loop).
+        """
+        observes = type(self).observe is not SampleStrategy.observe
+        return not self.needs_batch_loss and (
+            not observes or self.fused_observe is not None)
+
     def batch_weights(self, indices: np.ndarray) -> np.ndarray | None:
         """Static per-sample loss weights for this batch (None = uniform).
 

@@ -15,6 +15,47 @@ from typing import Callable, Iterator
 import numpy as np
 
 
+def epoch_index_plan(indices: np.ndarray, batch_size: int,
+                     pad_final: bool = True) -> np.ndarray:
+    """The epoch's batch layout as one ``(num_steps, batch_size)`` array.
+
+    Row ``i`` is exactly the index list ``Pipeline.batches`` yields for batch
+    ``i`` — full batches in order, then (with ``pad_final``) the trailing
+    partial batch padded by cycling from the front of the already-shuffled
+    epoch.  ``Pipeline.batches`` itself iterates this plan, so the host-loop
+    and scanned epoch engines assemble bit-identical batches by construction.
+    An index list shorter than one batch yields a ``(0, batch_size)`` plan.
+    """
+    bs = batch_size
+    n_full = len(indices) // bs
+    rows = [np.asarray(indices[: n_full * bs]).reshape(n_full, bs)]
+    rem = len(indices) - n_full * bs
+    if rem and pad_final and len(indices) >= bs:
+        rows.append(np.concatenate(
+            [indices[n_full * bs :], indices[: bs - rem]])[None])
+    return np.concatenate(rows, axis=0) if len(rows) > 1 else rows[0]
+
+
+def materialize(get_fn: Callable[[np.ndarray], dict], num_samples: int,
+                chunk: int = 4096) -> dict:
+    """Assemble the full dataset as host arrays, in ``chunk``-row pieces.
+
+    The device-resident placement path of the scanned epoch engine: every
+    per-index-deterministic dataset (the ``dataset.get`` contract) can be
+    materialised once and thereafter batched by on-device gather instead of
+    per-batch host assembly + H2D copies.  Chunking bounds the transient
+    memory of generator-style datasets (``data/synthetic.py`` builds each
+    row from its per-sample seed).
+    """
+    parts = []
+    for start in range(0, num_samples, chunk):
+        parts.append(get_fn(np.arange(start, min(start + chunk, num_samples))))
+    if len(parts) == 1:
+        return parts[0]
+    return {k: np.concatenate([p[k] for p in parts], axis=0)
+            for k in parts[0]}
+
+
 def worker_slice(indices: np.ndarray, world_size: int, rank: int,
                  batch_size_per_worker: int) -> np.ndarray:
     """Deterministic per-worker view of an epoch index list.
@@ -42,15 +83,12 @@ class Pipeline:
         """Full batches; the trailing partial batch is padded by cycling from
         the (already shuffled) front of the epoch instead of being dropped —
         dropping it would quantize away up to B-1 samples' worth of SGD steps,
-        which at small N visibly distorts the hidden-fraction accounting."""
-        bs = self.batch_size
-        n_full = len(indices) // bs
-        for start in range(0, n_full * bs, bs):
-            idx = indices[start : start + bs]
-            yield idx, self.get_fn(idx)
-        rem = len(indices) - n_full * bs
-        if rem and self.pad_final and len(indices) >= bs:
-            idx = np.concatenate([indices[n_full * bs:], indices[: bs - rem]])
+        which at small N visibly distorts the hidden-fraction accounting.
+        The batch layout is ``epoch_index_plan`` — the same plan the scanned
+        epoch engine ships to device — so the two assembly paths agree row
+        for row."""
+        for idx in epoch_index_plan(np.asarray(indices), self.batch_size,
+                                    self.pad_final):
             yield idx, self.get_fn(idx)
 
     def padded_batch(self, indices: np.ndarray) -> tuple[np.ndarray, dict, int]:

@@ -49,6 +49,14 @@ class SyntheticClassification:
         self.labels[flip] = rng.integers(0, c, flip.sum())
         self.is_noisy = flip
 
+    def arrays(self, chunk: int = 4096) -> dict:
+        """Full dataset as arrays (device placement path of the scanned epoch
+        engine).  Rows are per-index deterministic — each image depends only
+        on its own ``noise_seed`` — so gathering rows from this
+        materialisation is bit-identical to per-batch ``get`` assembly."""
+        from repro.data.pipeline import materialize
+        return materialize(self.get, self.num_samples, chunk)
+
     def get(self, indices: np.ndarray) -> dict:
         imgs = np.empty((len(indices), self.image_size, self.image_size,
                          self.channels), np.float32)
@@ -101,6 +109,12 @@ class SyntheticLM:
             else:
                 seq[t] = self.table[tuple(seq[t - self.order : t])]
         return seq
+
+    def arrays(self, chunk: int = 4096) -> dict:
+        """Full dataset as arrays (see ``SyntheticClassification.arrays``);
+        sequences are per-index deterministic via ``sample_seed``."""
+        from repro.data.pipeline import materialize
+        return materialize(self.get, self.num_samples, chunk)
 
     def get(self, indices: np.ndarray) -> dict:
         seqs = np.stack([self._gen_one(int(i)) for i in indices])

@@ -1,8 +1,7 @@
 """Epoch-based trainer over the unified ``SampleStrategy`` protocol.
 
-This is the host-side training loop used by the paper-reproduction
-experiments and the end-to-end examples.  It runs in two modes behind one
-config:
+This is the training loop used by the paper-reproduction experiments and
+the end-to-end examples.  It runs in two placement modes behind one config:
 
 - **single-device** (``mesh_shape=None``, the default): the original jitted
   train/eval steps, unchanged and bit-for-bit compatible with every
@@ -12,9 +11,19 @@ config:
   params/optimizer state replicated, batches and the strategy's
   ``SampleState`` row-sharded, the fused observe scatter kept sharded via
   GSPMD, and gradients combined with a *chunk-major deterministic fold*
-  (see ``_jit_steps_mesh``) so losses and parameter trajectories are
+  (see ``_jit_steps_mesh``; ``grad_allreduce="psum"`` swaps in the fast
+  O(params) all-reduce) so losses and parameter trajectories are
   bit-identical for every mesh size dividing ``grad_chunks``.
   ``tests/test_mesh_trainer.py`` enforces ``(1,)`` vs ``(8,)`` equality.
+
+Orthogonally, the per-epoch batch loop is dispatched by an *epoch engine*
+(``train/engines.py``, selected per strategy capability in
+``_make_engine``): the classic host loop (one jitted step per
+host-assembled batch), or — for strategies whose per-batch work fits
+entirely inside the jitted step — the scanned engine, which gathers batches
+from device-resident data and rolls ``scan_steps`` train steps into each
+``lax.scan`` dispatch.  The two engines share ``_step_core`` and are
+bit-identical (``tests/test_scan_engine.py``).
 
 (The pod-scale pjit step for the large model configs lives in
 ``repro.launch.train`` and shares the same Model API and ``EpochPlan``
@@ -48,10 +57,11 @@ from repro.core import (
     ForgetConfig, ISWRConfig, InfoBatchConfig, KakurenboConfig, LRSchedule,
     SBConfig, GradMatchConfig, SampleStrategy, make_strategy,
 )
-from repro.data.pipeline import Pipeline
+from repro.data.pipeline import Pipeline, materialize
 from repro.dist.compression import compress_grads, init_error_feedback
 from repro.dist.sharding import ParallelCtx, shard_map_compat
 from repro.optim.optimizers import Optimizer, make_optimizer
+from repro.train.engines import HostLoopEngine, ScanEpochEngine
 
 
 @dataclasses.dataclass
@@ -92,6 +102,26 @@ class TrainConfig:
     # losses/trajectories bit-identical across any mesh size dividing it.
     # Must divide batch_size.
     grad_chunks: int = 8
+    # How mesh gradients are combined: "fold" (default) is the chunk-major
+    # deterministic fold above — O(grad_chunks x params) all-gather bytes,
+    # bit-identical across mesh sizes; "psum" is the fast O(params)
+    # all-reduce (one pmean over the data axis) for deployments that prefer
+    # speed over cross-mesh-size reproducibility.
+    grad_allreduce: str = "fold"
+    # Epoch engine: "auto" runs strategies whose per-batch work fits inside
+    # the jitted step (SampleStrategy.supports_scan + active fused observe)
+    # through the scanned engine, and everything else (needs_batch_loss,
+    # fused_observe=False) through the host loop; "scan"/"host" force one
+    # (forcing "scan" on an incapable strategy raises).
+    engine: str = "auto"
+    # Scanned engine: place the full dataset in device memory once and
+    # assemble batches by on-device gather (False forces host assembly, i.e.
+    # the host-loop engine under engine="auto").
+    device_data: bool = True
+    # Scanned engine: train steps rolled into one lax.scan dispatch (the
+    # block is unrolled, so compile time grows with this; dispatch count
+    # shrinks as 1/scan_steps).
+    scan_steps: int = 8
 
 
 @dataclasses.dataclass
@@ -108,6 +138,8 @@ class EpochStats:
     # quantity the device-resident selection engine minimises; step-D
     # refresh is epoch-boundary work accounted in fwd_samples instead).
     host_syncs: int = 0
+    # Which epoch engine dispatched the batch loop ("host" | "scan").
+    engine: str = "host"
 
 
 class Trainer:
@@ -146,10 +178,20 @@ class Trainer:
             cfg.strategy, self.num_samples, cfg=cfg, seed=cfg.seed,
             num_classes=num_classes, total_epochs=cfg.epochs, ctx=self.ctx)
         self.feats_fn = feats_fn
+        self._device_data = None       # lazy cache, see device_data()
         self._jit_steps()
 
     def _build_ctx(self) -> ParallelCtx:
         c = self.cfg
+        if c.engine not in ("auto", "scan", "host"):
+            raise ValueError(
+                f"TrainConfig.engine={c.engine!r}: must be 'auto', 'scan' or "
+                "'host'")
+        if c.grad_allreduce not in ("fold", "psum"):
+            raise ValueError(
+                f"TrainConfig.grad_allreduce={c.grad_allreduce!r}: must be "
+                "'fold' (deterministic chunk-major fold) or 'psum' (fast "
+                "O(params) all-reduce)")
         if not c.mesh_shape:
             return ParallelCtx()
         from repro.launch.mesh import make_data_mesh
@@ -193,9 +235,14 @@ class Trainer:
         self._fuse = fuse
         if self.ctx.mesh is not None:
             self._jit_steps_mesh(fuse)
+            self.engine = self._make_engine()
             return
         opt, loss_fn, compress = self.opt, self.loss_fn, self.cfg.grad_compression
 
+        # The un-jitted step math, shared by both epoch engines: the host
+        # loop jits it per batch, the scanned engine inlines it into its
+        # lax.scan blocks — one compilation contract, so the engines are
+        # bit-identical by construction.
         def train_step(params, opt_state, ef, sstate, batch, indices, epoch,
                        lr):
             (scalar, metrics), grads = jax.value_and_grad(
@@ -212,8 +259,56 @@ class Trainer:
             _, metrics = loss_fn(params, batch)
             return metrics
 
+        self._step_core = train_step
         self._train_step = jax.jit(train_step, donate_argnums=(0, 1, 2, 3))
         self._eval_step = jax.jit(eval_step)
+        self.engine = self._make_engine()
+
+    def _make_engine(self):
+        """Pick the epoch engine for this (strategy, config) pair.
+
+        The scanned engine requires every per-batch hook to be expressible
+        on device: ``SampleStrategy.supports_scan`` plus an *active* fused
+        observe whenever the strategy observes at all
+        (``TrainConfig.fused_observe=False`` forces the host loop, keeping
+        the legacy differential-parity path intact).
+        """
+        s = self.strategy
+        observes = type(s).observe is not SampleStrategy.observe
+        scannable = s.supports_scan and (self._fuse is not None
+                                         or not observes)
+        mode = self.cfg.engine
+        if mode == "scan" and not scannable:
+            raise ValueError(
+                f"engine='scan' but strategy {s.name!r} cannot run scanned "
+                "epochs (needs_batch_loss or host-side observe without an "
+                "active fused_observe) — use engine='auto' or 'host'")
+        if mode == "scan" and not self.cfg.device_data:
+            raise ValueError(
+                "engine='scan' requires device_data=True — the scanned "
+                "engine assembles batches by gathering from the "
+                "device-resident dataset")
+        use_scan = (mode == "scan" or (mode == "auto" and scannable
+                                       and self.cfg.device_data
+                                       and self.cfg.scan_steps > 0))
+        return ScanEpochEngine(self) if use_scan else HostLoopEngine(self)
+
+    def device_data(self) -> dict:
+        """The full dataset as device arrays, placed once and cached
+        (row-sharded over the data axes under a mesh when N divides the
+        data-parallel degree, replicated otherwise) — the gather source for
+        the scanned engine's on-device batch assembly."""
+        if self._device_data is None:
+            arrays = (self.dataset.arrays() if hasattr(self.dataset, "arrays")
+                      else materialize(self.dataset.get, self.num_samples))
+            if (self.ctx.mesh is not None
+                    and self.num_samples % self.ctx.dp_size == 0):
+                self._device_data = self.ctx.shard_rows(
+                    {k: jnp.asarray(v) for k, v in arrays.items()})
+            else:
+                self._device_data = self.ctx.replicate(
+                    {k: jnp.asarray(v) for k, v in arrays.items()})
+        return self._device_data
 
     def _jit_steps_mesh(self, fuse):
         """Mesh-sharded train/eval steps (``TrainConfig.mesh_shape``).
@@ -223,17 +318,22 @@ class Trainer:
 
         - params / optimizer state / EF residuals are replicated; batches,
           per-sample metrics and ``SampleState`` are row-sharded.
-        - The global batch is viewed as ``grad_chunks`` fixed-size chunks in
-          batch order.  Each device computes per-chunk loss/grads for its
-          contiguous chunk range *in parallel*, then partial results are
-          all-gathered and folded left-to-right in global chunk order.  The
-          reduction tree therefore depends only on ``grad_chunks`` — never
-          on the mesh size — which is what makes losses and parameter
-          trajectories bit-identical between ``(1,)`` and ``(8,)`` meshes
+        - ``grad_allreduce="fold"`` (default): the global batch is viewed as
+          ``grad_chunks`` fixed-size chunks in batch order.  Each device
+          computes per-chunk loss/grads for its contiguous chunk range *in
+          parallel*, then partial results are all-gathered and folded
+          left-to-right in global chunk order.  The reduction tree therefore
+          depends only on ``grad_chunks`` — never on the mesh size — which
+          is what makes losses and parameter trajectories bit-identical
+          between ``(1,)`` and ``(8,)`` meshes
           (``tests/test_mesh_trainer.py``).  The all-gather costs
-          O(grad_chunks × params) wire bytes versus a psum's O(params); a
-          deployment that prefers speed over cross-mesh reproducibility can
-          swap the fold for ``jax.lax.psum`` without touching anything else.
+          O(grad_chunks × params) wire bytes versus a psum's O(params).
+        - ``grad_allreduce="psum"``: the fast mode — each device takes one
+          loss/grad over its whole batch shard and gradients are combined
+          with a single ``pmean`` over the data axis.  O(params) wire bytes
+          and no chunk loop, but the reduction tree now depends on the mesh
+          size, so results are reproducible per mesh size rather than across
+          mesh sizes.
         - Error-feedback compression (``grad_compression``) quantizes the
           folded (replicated) gradients before the optimizer update — the
           same contract as the single-device step, so it is deterministic
@@ -251,6 +351,21 @@ class Trainer:
         D = ctx.dp_size
         local_chunks = C // D
         chunk_rows = self.cfg.batch_size // C
+
+        def local_core_psum(params, opt_state, ef, batch, lr):
+            # Fast mode: one loss/grad over the local rows, one O(params)
+            # pmean.  Equal shard sizes make the mean-of-local-means the
+            # exact global-batch mean in real arithmetic; in floats the
+            # reduction tree depends on D, hence no cross-mesh-size
+            # bit-identity promise (grad_allreduce="fold" has that).
+            (scalar, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = jax.lax.pmean(grads, "data")
+            scalar = jax.lax.pmean(scalar, "data")
+            if compress:
+                grads, ef = compress_grads(grads, ef)
+            params, opt_state = opt.update(grads, opt_state, params, lr)
+            return params, opt_state, ef, scalar, metrics
 
         def local_core(params, opt_state, ef, batch, lr):
             # Local rows: (B/D, ...) = ``local_chunks`` contiguous global
@@ -292,7 +407,9 @@ class Trainer:
             return params, opt_state, ef, scalar, metrics
 
         core = shard_map_compat(
-            local_core, mesh=mesh,
+            local_core_psum if self.cfg.grad_allreduce == "psum"
+            else local_core,
+            mesh=mesh,
             in_specs=(P(), P(), P(), P("data"), P()),
             out_specs=(P(), P(), P(), P(), P("data")))
 
@@ -310,6 +427,7 @@ class Trainer:
             _, metrics = loss_fn(params, batch)
             return metrics
 
+        self._step_core = train_step
         self._train_step = jax.jit(train_step, donate_argnums=(0, 1, 2, 3))
         # Forward-only metrics are per-sample (no cross-sample reductions in
         # the loss vector), so plain GSPMD over the sharded batch is already
@@ -346,52 +464,11 @@ class Trainer:
         t0 = time.perf_counter()
         indices, plan = self._epoch_indices(epoch)
         lr = float(c.lr(epoch)) * plan.lr_scale
-        fwd = bwd = 0
-        losses = []
-        # Fused path: thread the strategy's device state through the jitted
-        # step for the whole epoch; hand it back only at the epoch boundary.
-        fuse = self._fuse
-        dev_state = self.strategy.get_device_state() if fuse else None
-        # Strategies that don't override observe() (e.g. baseline) keep no
-        # per-sample state, so their no-op observe is not a host round trip.
-        observes = type(self.strategy).observe is not SampleStrategy.observe
-        loop_syncs = 0
-        epoch_dev = jnp.int32(epoch)
-        try:
-            for idx, batch in self.pipeline.batches(indices):
-                fwd += len(idx)
-                if self.strategy.needs_batch_loss:
-                    # forward-only pass for selection, then masked backward
-                    lv, _, _ = self._eval_step(self.params, batch)
-                    weight = self.strategy.select_batch(idx, np.asarray(lv))
-                    # None = uniform: the whole batch still takes the
-                    # backward pass, so it must count —
-                    # np.count_nonzero(None) == 0 would silently zero out
-                    # the paper's work accounting.
-                    bwd += (len(idx) if weight is None
-                            else int(np.count_nonzero(weight)))
-                else:
-                    weight = self.strategy.batch_weights(idx)
-                    bwd += len(idx)
-                b = dict(batch)
-                if weight is not None:
-                    b["weight"] = jnp.asarray(weight, jnp.float32)
-                (self.params, self.opt_state, self.ef_state, dev_state,
-                 scalar, metrics) = self._train_step(
-                    self.params, self.opt_state, self.ef_state, dev_state, b,
-                    jnp.asarray(idx), epoch_dev, lr)
-                losses.append(float(scalar))
-                if fuse is None:
-                    lv, pa, pc = metrics
-                    self.strategy.observe(idx, lv, pa, pc, epoch)
-                    loop_syncs += int(observes)
-        finally:
-            # The train step donates dev_state, so mid-epoch the strategy's
-            # own reference may point at deleted buffers — always hand back
-            # the latest live state, even on a crash, so checkpoint-on-fault
-            # (save_checkpoint -> strategy.state_dict) stays valid.
-            if fuse is not None:
-                self.strategy.set_device_state(dev_state)
+        # The batch loop is the engine's job (train/engines.py): the host
+        # loop dispatches one jitted step per batch; the scanned engine
+        # gathers batches on device and dispatches scan_steps-sized blocks.
+        res = self.engine.run_epoch(epoch, indices, plan, lr)
+        fwd, bwd = res.fwd_samples, res.bwd_samples
         if plan.needs_refresh:
             # KAKURENBO step D: forward-only refresh of the hidden list.
             def fwd_fn(idx):
@@ -401,12 +478,14 @@ class Trainer:
                                   and epoch % c.eval_every == 0) else float("nan")
         stats = EpochStats(
             epoch=epoch,
-            train_loss=float(np.mean(losses)) if losses else float("nan"),
+            train_loss=(float(np.mean(res.losses)) if len(res.losses)
+                        else float("nan")),
             test_acc=acc,
             hidden_fraction=plan.hidden_fraction,
             fwd_samples=fwd, bwd_samples=bwd, lr=lr,
             wall_time=time.perf_counter() - t0,
-            host_syncs=plan.host_syncs + loop_syncs)
+            host_syncs=plan.host_syncs + res.host_syncs,
+            engine=self.engine.name)
         self.history.append(stats)
         self.epoch = epoch + 1
         if (c.checkpoint_dir and c.checkpoint_every

@@ -47,7 +47,7 @@ def loss_fn(params, batch):
 
 def make_trainer(mesh_shape, epochs=3, selection="histogram",
                  compression=False, strategy="kakurenbo", fused=True,
-                 checkpoint_dir=None):
+                 checkpoint_dir=None, **tc_kw):
     ds = SyntheticClassification(num_samples=512, image_size=8, seed=0)
     kc = KakurenboConfig(selection=selection, max_fraction=0.3,
                          fraction_milestones=(0, 1, 2, 3))
@@ -56,7 +56,7 @@ def make_trainer(mesh_shape, epochs=3, selection="histogram",
                      mesh_shape=mesh_shape, grad_chunks=8,
                      grad_compression=compression, fused_observe=fused,
                      seed=0, checkpoint_dir=checkpoint_dir,
-                     checkpoint_every=1 if checkpoint_dir else 0)
+                     checkpoint_every=1 if checkpoint_dir else 0, **tc_kw)
     return Trainer(tc, lambda r: cnn.init(r, MODEL), loss_fn, ds, None)
 
 def run(mesh_shape, **kw):
@@ -174,6 +174,45 @@ print("MESH_OK")
 """)
 
 
+def test_mesh_scan_engine_parity():
+    """The scanned epoch engine composes with the shard_map core: under the
+    mesh it is bit-identical to the host-loop engine AND mesh-size-invariant
+    ((1,) vs (8,) under scan blocks), with the dataset and epoch index plan
+    row-sharded over the data axis."""
+    _run("""
+a = run((8,), engine="scan")
+b = run((8,), engine="host")
+assert_bit_identical(a, b, "scan-vs-host-mesh")
+c = run((1,), engine="scan")
+assert_bit_identical(a, c, "scan-mesh-size")
+from repro.train.engines import ScanEpochEngine
+assert isinstance(make_trainer((8,), engine="scan").engine, ScanEpochEngine)
+# scanned fused epochs keep the O(1) host-sync contract under the mesh too
+assert all(r["host_syncs"] == 1 for r in a[0]), a[0]
+print("MESH_OK")
+""")
+
+
+def test_mesh_grad_allreduce_psum():
+    """grad_allreduce="psum" (the fast O(params) all-reduce) converges and
+    tracks the fold; the default stays the chunk-major fold, bit-identical
+    to an explicit grad_allreduce="fold"."""
+    _run("""
+fold_default = run((8,))
+fold_explicit = run((8,), grad_allreduce="fold")
+assert_bit_identical(fold_default, fold_explicit, "fold-default")
+psum = run((8,), grad_allreduce="psum")
+lp = [r["loss"] for r in psum[0]]
+lf = [r["loss"] for r in fold_default[0]]
+assert lp[-1] < lp[0], lp                        # converges
+assert np.allclose(lp, lf, rtol=0.1), (lp, lf)   # tracks the fold
+# psum is reproducible at a fixed mesh size
+psum2 = run((8,), grad_allreduce="psum")
+assert_bit_identical(psum, psum2, "psum-repro")
+print("MESH_OK")
+""")
+
+
 def test_mesh_other_strategies_smoke():
     """Strategies that don't take a ParallelCtx (unsharded device state /
     host-only plans) still train under the mesh via GSPMD resharding."""
@@ -204,6 +243,13 @@ except ValueError as e:
     assert "batch_size" in str(e)
 else:
     raise AssertionError("batch_size%grad_chunks!=0 should fail")
+tc = TrainConfig(mesh_shape=(8,), grad_allreduce="mean")
+try:
+    Trainer(tc, lambda r: cnn.init(r, MODEL), loss_fn, ds, None)
+except ValueError as e:
+    assert "grad_allreduce" in str(e)
+else:
+    raise AssertionError("grad_allreduce='mean' should fail")
 from repro.core import make_strategy
 from repro.launch.mesh import data_parallel_ctx
 try:

@@ -1,0 +1,272 @@
+"""Scanned epoch engine: bit-identity with the host loop (the tentpole bar).
+
+The scanned engine (``train/engines.py::ScanEpochEngine``) changes *how* an
+epoch is dispatched — device-resident data, gather-based batch assembly,
+``scan_steps`` train steps per ``lax.scan`` dispatch, one loss fetch per
+epoch — but must not change a single bit of *what* is computed: per-epoch
+losses, parameter trajectories, the strategy's ``SampleState``, hidden and
+move-back sets, and checkpoint/restart behaviour are all required to be
+identical to the host-loop engine, for every strategy that opts in
+(``SampleStrategy.supports_scan``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import KakurenboConfig, LRSchedule
+from repro.data import SyntheticClassification
+from repro.data.pipeline import Pipeline, epoch_index_plan
+from repro.models import cnn
+from repro.train import Trainer, TrainConfig
+from repro.train.engines import HostLoopEngine, ScanEpochEngine
+
+CFG_MODEL = cnn.CNNConfig(image_size=8, widths=(8,), hidden=16)
+
+
+def _fns():
+    def init_params(rng):
+        return cnn.init(rng, CFG_MODEL)
+
+    def loss_fn(params, batch):
+        logits = cnn.forward(params, CFG_MODEL, batch["images"])
+        loss, pa, pc = cnn.per_sample_metrics(logits, batch["labels"])
+        w = batch.get("weight")
+        scalar = jnp.mean(loss * w) if w is not None else jnp.mean(loss)
+        return scalar, (loss, pa, pc)
+
+    return init_params, loss_fn
+
+
+def _mk(engine, strategy="kakurenbo", epochs=3, num_samples=256, seed=0,
+        checkpoint_dir=None, **tc_kw):
+    ds = SyntheticClassification(num_samples=num_samples, image_size=8,
+                                 seed=0)
+    init_params, loss_fn = _fns()
+    tc = TrainConfig(
+        epochs=epochs, batch_size=64, strategy=strategy, engine=engine,
+        lr=LRSchedule(0.05, "cosine", epochs, 1),
+        kakurenbo=KakurenboConfig(max_fraction=0.3,
+                                  fraction_milestones=(0, 1, 2, 3)),
+        seed=seed, checkpoint_dir=checkpoint_dir,
+        checkpoint_every=1 if checkpoint_dir else 0, **tc_kw)
+    return Trainer(tc, init_params, loss_fn, ds, None)
+
+
+def _run_capturing_plans(tr):
+    plans = []
+    orig = tr.strategy.plan
+    tr.strategy.plan = lambda e: (plans.append(orig(e)) or plans[-1])
+    hist = tr.run()
+    return hist, plans
+
+
+def _assert_same_trajectory(tr_a, tr_b, hist_a, hist_b, plans_a, plans_b,
+                            tag):
+    assert [h.train_loss for h in hist_a] == [h.train_loss for h in hist_b], tag
+    assert ([(h.fwd_samples, h.bwd_samples) for h in hist_a]
+            == [(h.fwd_samples, h.bwd_samples) for h in hist_b]), tag
+    for a, b in zip(jax.tree.leaves(tr_a.params), jax.tree.leaves(tr_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=tag)
+    for pa, pb in zip(plans_a, plans_b):
+        np.testing.assert_array_equal(pa.visible_indices, pb.visible_indices,
+                                      err_msg=tag)
+        np.testing.assert_array_equal(np.sort(pa.hidden_indices),
+                                      np.sort(pb.hidden_indices), err_msg=tag)
+        np.testing.assert_array_equal(pa.moveback_indices,
+                                      pb.moveback_indices, err_msg=tag)
+    state_a = tr_a.strategy.get_device_state()
+    state_b = tr_b.strategy.get_device_state()
+    if state_a is not None:
+        for a, b in zip(jax.tree.leaves(state_a), jax.tree.leaves(state_b)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=tag)
+
+
+# --------------------------------------------------------------------------
+# epoch plan layout
+# --------------------------------------------------------------------------
+
+
+def test_epoch_index_plan_matches_pipeline_batches(rng):
+    """The (num_steps, B) plan rows are exactly what Pipeline.batches
+    yields, including the cycled-from-front padded final batch."""
+    for n, bs in [(256, 64), (300, 64), (63, 64), (64, 64), (130, 64)]:
+        idx = rng.permutation(n)
+        plan = epoch_index_plan(idx, bs)
+        rows = [i for i, _ in Pipeline(lambda x: {"x": x}, bs).batches(idx)]
+        assert plan.shape == (len(rows), bs)
+        for r, row in enumerate(rows):
+            np.testing.assert_array_equal(plan[r], row)
+
+
+def test_epoch_index_plan_short_epoch_is_empty():
+    assert epoch_index_plan(np.arange(10), 64).shape == (0, 64)
+
+
+# --------------------------------------------------------------------------
+# engine parity
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy",
+                         ["kakurenbo", "baseline", "iswr", "infobatch"])
+def test_scan_engine_bit_identical_to_host_loop(strategy):
+    """Same losses, params, SampleState, hidden/move-back sets and work
+    accounting from both engines — and O(1) host syncs from the scanned
+    epoch (the plan materialisation only)."""
+    tr_s = _mk("scan", strategy)
+    tr_h = _mk("host", strategy)
+    assert isinstance(tr_s.engine, ScanEpochEngine)
+    assert isinstance(tr_h.engine, HostLoopEngine)
+    hist_s, plans_s = _run_capturing_plans(tr_s)
+    hist_h, plans_h = _run_capturing_plans(tr_h)
+    _assert_same_trajectory(tr_s, tr_h, hist_s, hist_h, plans_s, plans_h,
+                            strategy)
+    assert all(h.engine == "scan" for h in hist_s)
+    # fused-observe scanned epochs: host_syncs == the per-epoch plan cost,
+    # never O(batches)
+    assert all(h.host_syncs <= 1 for h in hist_s)
+
+
+@pytest.mark.parametrize("scan_steps", [1, 3, 64])
+def test_scan_block_size_invariance(scan_steps):
+    """K=1 (per-step scan blocks), K=3 (remainder blocks every epoch) and
+    K=64 (the whole epoch in one dispatch) are all bit-identical."""
+    ref = _mk("scan", scan_steps=8)
+    hist_ref = ref.run()
+    tr = _mk("scan", scan_steps=scan_steps)
+    hist = tr.run()
+    assert [h.train_loss for h in hist] == [h.train_loss for h in hist_ref]
+    for a, b in zip(jax.tree.leaves(tr.params), jax.tree.leaves(ref.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_legacy_fused_off_still_forces_host_loop():
+    """fused_observe=False is the differential-parity path: it must run the
+    host loop (per-batch observe) even under engine='auto', and still match
+    the scanned default bit for bit."""
+    tr_legacy = _mk("auto", fused_observe=False)
+    assert isinstance(tr_legacy.engine, HostLoopEngine)
+    tr_scan = _mk("auto")
+    assert isinstance(tr_scan.engine, ScanEpochEngine)
+    hist_l = tr_legacy.run()
+    hist_s = tr_scan.run()
+    assert [h.train_loss for h in hist_s] == [h.train_loss for h in hist_l]
+    for a, b in zip(jax.tree.leaves(tr_scan.params),
+                    jax.tree.leaves(tr_legacy.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_needs_batch_loss_strategy_keeps_host_loop():
+    """Selective-Backprop's forward-then-select flow cannot scan: auto picks
+    the host loop, forcing engine='scan' is a config error."""
+    tr = _mk("auto", "sb", epochs=1)
+    assert isinstance(tr.engine, HostLoopEngine)
+    tr.run()
+    with pytest.raises(ValueError, match="scan"):
+        _mk("scan", "sb")
+
+
+def test_engine_config_validation():
+    """Contradictory or unknown engine configs fail fast; device_data=False
+    disables auto-scan (and never materialises the dataset)."""
+    with pytest.raises(ValueError, match="device_data"):
+        _mk("scan", device_data=False)
+    with pytest.raises(ValueError, match="engine"):
+        _mk("scanned")
+    tr = _mk("auto", device_data=False)
+    assert isinstance(tr.engine, HostLoopEngine)
+    assert tr._device_data is None
+    # lazy placement: building a scan trainer doesn't materialise either
+    assert _mk("scan")._device_data is None
+
+
+def test_warmup_compiles_all_block_shapes_without_training():
+    """warmup() runs dummy blocks on a cloned carry: every dispatchable
+    block shape ({K} + power-of-2 remainders) compiles, the real train
+    state is untouched, and the subsequent run is still bit-identical."""
+    tr = _mk("scan", scan_steps=8)
+    before = [np.asarray(x).copy() for x in jax.tree.leaves(tr.params)]
+    assert tr.engine.warmup() == 4  # 8, then 1/2/4 remainder lengths
+    for a, b in zip(jax.tree.leaves(tr.params), before):
+        np.testing.assert_array_equal(np.asarray(a), b)
+    hist = tr.run()
+    ref = _mk("host").run()
+    assert [h.train_loss for h in hist] == [h.train_loss for h in ref]
+
+
+def test_scan_engine_with_grad_compression():
+    """The EF residual rides the scan carry: compressed-gradient training is
+    engine-independent too."""
+    tr_s = _mk("scan", "baseline", grad_compression=True)
+    tr_h = _mk("host", "baseline", grad_compression=True)
+    hist_s = tr_s.run()
+    hist_h = tr_h.run()
+    assert [h.train_loss for h in hist_s] == [h.train_loss for h in hist_h]
+    for a, b in zip(jax.tree.leaves(tr_s.ef_state),
+                    jax.tree.leaves(tr_h.ef_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# restart
+# --------------------------------------------------------------------------
+
+
+def test_scan_mid_epoch_crash_checkpoint_restart(tmp_path):
+    """A crash *between scan blocks* mid-epoch leaves live (non-donated)
+    buffers — state_dict works for checkpoint-on-fault — and restarting from
+    the last epoch-boundary checkpoint replays the exact trajectory."""
+    ref = _mk("scan", epochs=4, scan_steps=1)
+    hist_ref = ref.run()
+
+    tr = _mk("scan", epochs=4, scan_steps=1,
+             checkpoint_dir=str(tmp_path / "ckpt"))
+    tr.run(2)  # checkpoints after every epoch
+    # crash inside epoch 2 after the first scan block
+    orig_block = tr.engine._block
+    calls = {"n": 0}
+
+    def bomb(carry, xs, epoch, lr):
+        if calls["n"] >= 1:
+            raise RuntimeError("injected mid-epoch failure")
+        calls["n"] += 1
+        return orig_block(carry, xs, epoch, lr)
+
+    tr.engine._block = bomb
+    with pytest.raises(RuntimeError, match="mid-epoch"):
+        tr.run_epoch(2)
+    assert calls["n"] == 1  # at least one block trained before the crash
+    # checkpoint-on-fault contract: the handed-back carry is fully live
+    sd = tr.strategy.state_dict()
+    jax.block_until_ready(jax.tree.leaves(sd["arrays"]))
+
+    tr2 = _mk("scan", epochs=4, scan_steps=1,
+              checkpoint_dir=str(tmp_path / "ckpt"), seed=99)
+    assert tr2.restore_latest()
+    assert tr2.epoch == 2
+    hist2 = tr2.run()
+    assert hist2[-1].train_loss == hist_ref[-1].train_loss
+    for a, b in zip(jax.tree.leaves(tr2.params), jax.tree.leaves(ref.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_scan_checkpoint_restart_bit_exact(tmp_path):
+    """Epoch-boundary crash/restart under the scanned engine (the
+    test_train_fault contract, re-run through scan dispatch)."""
+    ref = _mk("scan", epochs=4)
+    ref.run()
+    tr = _mk("scan", epochs=4, checkpoint_dir=str(tmp_path / "ckpt"))
+    with pytest.raises(RuntimeError):
+        tr.run(4, fail_at_epoch=2)
+    tr2 = _mk("scan", epochs=4, checkpoint_dir=str(tmp_path / "ckpt"))
+    assert tr2.restore_latest()
+    tr2.run()
+    for a, b in zip(jax.tree.leaves(tr2.params), jax.tree.leaves(ref.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(tr2.sampler.state.loss), np.asarray(ref.sampler.state.loss))
