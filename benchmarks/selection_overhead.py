@@ -10,7 +10,10 @@ one host sync).
 Also demonstrates the engine's host-sync contract by driving one simulated
 epoch through both observation paths and counting SampleState host round
 trips: legacy per-batch ``observe()`` pays batches+1, the fused path
-(scatter inside the jitted train step) pays exactly 1.
+(scatter inside the jitted train step) pays exactly 1.  And — now that
+PlanOps moved every strategy's planning on device — ``strategy_sync_counts``
+trains a real (tiny) epoch per *registered strategy* and asserts each one
+plans with exactly 1 host sync/epoch under the scanned engine.
 
 ``--mesh`` switches to the mesh-sharded engine: an 8-device ``("data",)``
 mesh (host-simulated; the flag is injected before jax initialises), the
@@ -116,6 +119,52 @@ def _epoch_sync_counts(n: int = 4096, batch: int = 256,
             "plan": plan_summary(plan)}
 
 
+def strategy_sync_counts(num_samples: int = 512, batch: int = 64,
+                         epochs: int = 2) -> list[dict]:
+    """One tiny training run per registered strategy: every strategy must
+    auto-select the scanned engine and keep plan+loop host syncs at
+    1/epoch — the PlanOps acceptance bar."""
+    import jax.numpy as jnp
+
+    from repro.core import (
+        ForgetConfig, LRSchedule, available_strategies,
+    )
+    from repro.data import SyntheticClassification
+    from repro.models import cnn
+    from repro.train import Trainer, TrainConfig
+
+    model_cfg = cnn.CNNConfig(image_size=8, widths=(8,), hidden=16)
+
+    def loss_fn(params, batch_):
+        logits = cnn.forward(params, model_cfg, batch_["images"])
+        loss, pa, pc = cnn.per_sample_metrics(logits, batch_["labels"])
+        w = batch_.get("weight")
+        scalar = jnp.mean(loss * w) if w is not None else jnp.mean(loss)
+        return scalar, (loss, pa, pc)
+
+    ds = SyntheticClassification(num_samples=num_samples, image_size=8,
+                                 seed=0)
+    records = []
+    for name in available_strategies():
+        tc = TrainConfig(
+            epochs=epochs, batch_size=batch, strategy=name,
+            kakurenbo=KakurenboConfig(selection="histogram", max_fraction=0.3,
+                                      fraction_milestones=(0, 1, 2, 3)),
+            forget=ForgetConfig(fraction=0.3, warmup_epochs=1),
+            lr=LRSchedule(0.05, "cosine", epochs, 1), seed=0)
+        tr = Trainer(tc, lambda r: cnn.init(r, model_cfg), loss_fn, ds, None)
+        hist = tr.run()
+        syncs = max(h.host_syncs for h in hist)
+        rec = {"bench": "strategy_host_syncs", "strategy": name,
+               "engine": hist[-1].engine, "host_syncs_per_epoch": syncs,
+               "epochs": epochs}
+        assert rec["engine"] == "scan", rec
+        assert syncs <= 1, rec
+        records.append(rec)
+        print("BENCH " + json.dumps(rec))
+    return records
+
+
 def mesh_main() -> None:
     from repro.launch.mesh import data_parallel_ctx
     ctx = data_parallel_ctx(8)
@@ -161,6 +210,7 @@ def main() -> None:
     assert sync["host_syncs_fused"] == 1, sync
     assert sync["host_syncs_legacy"] == sync["batches"] + 1, sync
     print("BENCH " + json.dumps({"bench": "sample_state_host_syncs", **sync}))
+    strategy_sync_counts()
 
 
 if __name__ == "__main__":

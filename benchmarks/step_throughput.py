@@ -16,20 +16,30 @@ where the scanned engine's gather-based assembly + multi-step ``lax.scan``
 dispatch shows up directly in steps/sec.  Recorded numbers live in
 ``results/BENCH_steps.json`` and ``docs/benchmarks.md``.
 
+``--strategies all`` sweeps the whole strategy registry instead of the
+hidden-fraction grid: one (strategy, engine) cell per registered name, so
+the scan-vs-host speedup is recorded per strategy now that PlanOps makes
+every strategy scan-capable.  With ``--out`` the records are APPENDED to an
+existing BENCH file (``results/BENCH_steps.json``) rather than replacing it.
+
 ``--smoke`` runs a tiny CI configuration and asserts the contract rather
-than the timing: the scanned engine actually engages, emits BENCH lines,
-and a fused-observe scanned epoch costs O(1) SampleState host syncs
-(1 = the plan materialisation) instead of O(batches).
+than the timing: the scanned engine actually engages — for *every*
+registered strategy — emits BENCH lines, and a device-planned scanned epoch
+costs O(1) SampleState/plan host syncs (1 = the plan materialisation)
+instead of O(batches).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import numpy as np
 
-from repro.core import KakurenboConfig, LRSchedule
+from repro.core import (
+    ForgetConfig, KakurenboConfig, LRSchedule, available_strategies,
+)
 from repro.data import SyntheticClassification
 from repro.models import cnn
 from repro.train import Trainer, TrainConfig
@@ -54,16 +64,23 @@ def _fns():
 
 
 def build_trainer(engine: str, hidden_fraction: float, *, num_samples: int,
-                  batch_size: int, epochs: int, scan_steps: int) -> Trainer:
-    # fraction 0 -> the baseline strategy (nothing to hide, pure engine
-    # overhead comparison); otherwise KAKURENBO at F_e = hidden_fraction
-    # with the O(N) histogram plan.
-    strategy = "baseline" if hidden_fraction == 0 else "kakurenbo"
-    kc = KakurenboConfig(selection="histogram", max_fraction=hidden_fraction,
+                  batch_size: int, epochs: int, scan_steps: int,
+                  strategy: str | None = None) -> Trainer:
+    # Without an explicit strategy: fraction 0 -> the baseline strategy
+    # (nothing to hide, pure engine overhead comparison); otherwise
+    # KAKURENBO at F_e = hidden_fraction with the O(N) histogram plan.
+    # With one (--strategies all): the registered name, hiding machinery
+    # configured the same way where applicable.
+    strategy = strategy or ("baseline" if hidden_fraction == 0
+                            else "kakurenbo")
+    kc = KakurenboConfig(selection="histogram",
+                         max_fraction=hidden_fraction or 0.3,
                          fraction_milestones=(0, 1, 2, 3))
     tc = TrainConfig(
         epochs=epochs, batch_size=batch_size, strategy=strategy,
         engine=engine, scan_steps=scan_steps, kakurenbo=kc,
+        forget=ForgetConfig(fraction=0.3,
+                            warmup_epochs=max(epochs // 2, 1)),
         lr=LRSchedule(0.05, "cosine", epochs, 1), seed=0)
     ds = SyntheticClassification(num_samples=num_samples, seed=0)
     init_params, loss_fn = _fns()
@@ -72,7 +89,8 @@ def build_trainer(engine: str, hidden_fraction: float, *, num_samples: int,
 
 def bench_engine(engine: str, hidden_fraction: float, *,
                  num_samples: int = 4096, batch_size: int = 128,
-                 epochs: int = 8, scan_steps: int = 8) -> dict:
+                 epochs: int = 8, scan_steps: int = 8,
+                 strategy: str | None = None) -> dict:
     """Train ``epochs`` epochs; report the *median* per-epoch batch-loop
     throughput over every epoch after the first.
 
@@ -84,7 +102,7 @@ def bench_engine(engine: str, hidden_fraction: float, *,
     """
     tr = build_trainer(engine, hidden_fraction, num_samples=num_samples,
                        batch_size=batch_size, epochs=epochs,
-                       scan_steps=scan_steps)
+                       scan_steps=scan_steps, strategy=strategy)
     if hasattr(tr.engine, "warmup"):
         tr.engine.warmup()   # compile all block shapes before the clock
     rates = []
@@ -104,9 +122,11 @@ def bench_engine(engine: str, hidden_fraction: float, *,
             host_syncs.append(plan.host_syncs + res.host_syncs)
     steps_per_s = float(np.median(rates))
     return {
-        "bench": "step_throughput",
+        "bench": ("step_throughput_strategy" if strategy
+                  else "step_throughput"),
+        "strategy": tr.strategy.name,
         "engine": tr.engine.name,
-        "hidden_fraction": hidden_fraction,
+        "hidden_fraction": None if strategy else hidden_fraction,
         "batch_size": batch_size,
         "num_samples": num_samples,
         "scan_steps": scan_steps if tr.engine.name == "scan" else None,
@@ -116,6 +136,20 @@ def bench_engine(engine: str, hidden_fraction: float, *,
         "host_syncs_per_epoch": max(host_syncs),
         "timed_epochs": epochs - 1,
     }
+
+
+def _write(records: list[dict], out: str | None) -> None:
+    """Append records to ``out`` (keeping earlier BENCH runs' records)."""
+    if not out:
+        return
+    existing = []
+    if os.path.exists(out):
+        with open(out) as f:
+            existing = json.load(f)
+    with open(out, "w") as f:
+        json.dump(existing + records, f, indent=1)
+    print(f"wrote {len(records)} records to {out} "
+          f"({len(existing)} pre-existing kept)")
 
 
 def main(out: str | None) -> None:
@@ -137,15 +171,38 @@ def main(out: str | None) -> None:
         }
         records.append(speedup)
         print("BENCH " + json.dumps(speedup))
-    if out:
-        with open(out, "w") as f:
-            json.dump(records, f, indent=1)
-        print(f"wrote {len(records)} records to {out}")
+    _write(records, out)
+
+
+def strategies_main(out: str | None) -> None:
+    """scan-vs-host throughput for every registered strategy (PlanOps made
+    the whole registry scan-capable, so the sweep is apples-to-apples)."""
+    records = []
+    for name in available_strategies():
+        cells = {}
+        for engine in ("host", "scan"):
+            rec = bench_engine(engine, 0.0, strategy=name, num_samples=2048,
+                               batch_size=128, epochs=5)
+            cells[engine] = rec
+            records.append(rec)
+            print("BENCH " + json.dumps(rec))
+        speedup = {
+            "bench": "step_throughput_strategy_speedup",
+            "strategy": name,
+            "batch_size": cells["host"]["batch_size"],
+            "scan_over_host":
+                round(cells["scan"]["steps_per_s"]
+                      / cells["host"]["steps_per_s"], 3),
+        }
+        records.append(speedup)
+        print("BENCH " + json.dumps(speedup))
+    _write(records, out)
 
 
 def smoke() -> None:
-    """CI contract check (timing-free): the scanned engine engages, emits a
-    BENCH record, and fused-observe scanned epochs cost O(1) host syncs."""
+    """CI contract check (timing-free): the scanned engine engages — for
+    every registered strategy — emits BENCH records, and device-planned
+    scanned epochs cost O(1) host syncs."""
     bench = []
     for engine in ("host", "scan"):
         rec = bench_engine(engine, 0.3, num_samples=512, batch_size=64,
@@ -159,6 +216,16 @@ def smoke() -> None:
     # crosses the host boundary once (the plan), never per batch
     assert scan["host_syncs_per_epoch"] == 1, scan
     assert scan["steps_per_s"] > 0, scan        # the BENCH record is real
+    # the PlanOps bar: every registered strategy is scan-capable under
+    # engine="auto" and keeps the 1-host-sync/epoch plan contract
+    for name in available_strategies():
+        rec = bench_engine("auto", 0.0, strategy=name, num_samples=256,
+                           batch_size=64, epochs=2, scan_steps=4)
+        bench.append(rec)
+        print("BENCH " + json.dumps(rec))
+        assert rec["engine"] == "scan", rec
+        assert rec["host_syncs_per_epoch"] <= 1, rec
+        assert rec["steps_per_s"] > 0, rec
     print(f"SMOKE_OK {len(bench)} BENCH lines")
 
 
@@ -167,8 +234,17 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run asserting the engine/host-sync "
                          "contract instead of recording timings")
+    ap.add_argument("--strategies", choices=("sweep", "all"), default="sweep",
+                    help="'all' benches every registered strategy "
+                         "(scan vs host) instead of the hidden-fraction "
+                         "sweep")
     ap.add_argument("--out", default=None,
-                    help="write BENCH records to this JSON file "
+                    help="append BENCH records to this JSON file "
                          "(e.g. results/BENCH_steps.json)")
     args = ap.parse_args()
-    smoke() if args.smoke else main(args.out)
+    if args.smoke:
+        smoke()
+    elif args.strategies == "all":
+        strategies_main(args.out)
+    else:
+        main(args.out)

@@ -4,7 +4,7 @@ from repro.configs import (
     seamless_m4t_large_v2, phi35_moe_42b, kimi_k2_1t, mamba2_130m,
     llava_next_mistral_7b, hymba_1_5b,
 )
-from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, shape_applicable
+from repro.configs.base import ArchConfig, SHAPES, shape_applicable
 
 ARCHS: dict[str, ArchConfig] = {
     m.CONFIG.name: m.CONFIG

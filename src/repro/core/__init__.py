@@ -4,6 +4,8 @@ All selection methods implement the unified ``SampleStrategy`` protocol and
 are discoverable through the registry (``make_strategy``/``STRATEGIES``);
 the legacy sampler classes remain exported for direct, low-level use.
 """
+from repro.core import planops  # noqa: F401
+from repro.core.planops import strategy_key  # noqa: F401
 from repro.core.state import (  # noqa: F401
     SampleState, TrainCarry, init_sample_state, scatter_observations,
     with_hidden,

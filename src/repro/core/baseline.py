@@ -6,6 +6,11 @@ by iid-uniform importance (paper App. C.4): hides the same *fraction* as
 KAKURENBO but picks the samples at random, isolating how much of the win
 comes from loss-ranked selection rather than from merely training on fewer
 samples.
+
+Both plan on device through ``core/planops.py``: the epoch shuffle (and the
+``random`` strategy's importance redraw) is driven by a checkpointable
+device PRNG key and materialised to the ``EpochPlan`` with one
+``jax.device_get`` — the same 1-host-sync/epoch contract as KAKURENBO.
 """
 from __future__ import annotations
 
@@ -15,31 +20,51 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import planops
 from repro.core.kakurenbo import KakurenboConfig, KakurenboSampler
 from repro.core.state import scatter_observations
-from repro.core.strategy import (
-    EpochPlan, SampleStrategy, register_strategy, rng_state, set_rng_state,
-)
+from repro.core.strategy import EpochPlan, SampleStrategy, register_strategy
+from repro.dist.sharding import ParallelCtx
 
 
 @register_strategy("baseline")
 class BaselineStrategy(SampleStrategy):
     """Uniform without-replacement epoch over every sample."""
 
-    def __init__(self, num_samples: int, config=None, seed: int = 0):
+    def __init__(self, num_samples: int, config=None, seed: int = 0,
+                 ctx: ParallelCtx | None = None):
         super().__init__(num_samples, config, seed)
-        self._rng = np.random.default_rng(seed + 1)
+        self.ctx = ctx or ParallelCtx()
+        self._key = self.ctx.replicate(planops.strategy_key(seed, "baseline"))
 
     def plan(self, epoch: int) -> EpochPlan:
-        idx = np.arange(self.num_samples)
-        self._rng.shuffle(idx)
-        return EpochPlan(epoch=epoch, visible_indices=idx)
+        self._key, sub = jax.random.split(self._key)
+        order = planops.device_permutation(sub, self.num_samples)
+        # The epoch's single host sync: materialise the shuffled order.
+        return EpochPlan(epoch=epoch,
+                         visible_indices=np.asarray(jax.device_get(order)),
+                         host_syncs=1)
 
     def state_dict(self) -> dict:
-        return {"arrays": {}, "host": {"rng": rng_state(self._rng)}}
+        return {"arrays": {"rng_key": planops.key_data(self._key)},
+                "host": {"rng_impl": planops.KEY_IMPL}}
 
     def load_state_dict(self, state: dict) -> None:
-        set_rng_state(self._rng, state["host"]["rng"])
+        # restore_key also migrates pre-PlanOps checkpoints (host numpy RNG).
+        self._key = self.ctx.replicate(
+            planops.restore_key(state, self.seed, "baseline"))
+
+
+@jax.jit
+def _randomize_importance(state, key):
+    """iid-uniform 'losses', always move-back-eligible: a pure coin flip."""
+    n = state.num_samples
+    return dataclasses.replace(
+        state,
+        loss=jax.random.uniform(key, (n,), jnp.float32),
+        pa=jnp.ones((n,), bool),
+        pc=jnp.ones((n,), jnp.float32),
+        seen=jnp.zeros((n,), jnp.int32))
 
 
 @register_strategy("random")
@@ -55,7 +80,8 @@ class RandomStrategy(SampleStrategy):
         self._inner = KakurenboSampler(
             num_samples, dataclasses.replace(config) if config else None, seed,
             ctx=ctx)
-        self._rng = np.random.default_rng(seed + 1)
+        self._key = self._inner.ctx.replicate(
+            planops.strategy_key(seed, "random"))
 
     @property
     def state(self):
@@ -67,19 +93,12 @@ class RandomStrategy(SampleStrategy):
     def set_device_state(self, state) -> None:
         self._inner.state = state
 
-    def _randomize_importance(self) -> None:
-        """Overwrite the lagging state with iid-uniform 'losses' that are
-        always move-back-eligible, so hiding is a pure coin flip."""
-        n = self.num_samples
-        self._inner.state = self._inner.ctx.shard_rows(dataclasses.replace(
-            self._inner.state,
-            loss=jnp.asarray(self._rng.random(n), jnp.float32),
-            pa=jnp.ones((n,), bool),
-            pc=jnp.ones((n,), jnp.float32),
-            seen=jnp.zeros((n,), jnp.int32)))
-
     def plan(self, epoch: int) -> EpochPlan:
-        self._randomize_importance()
+        # Overwrite the lagging state with device-drawn iid importance, then
+        # run the standard KAKURENBO plan step on it.
+        self._key, sub = jax.random.split(self._key)
+        self._inner.state = self._inner.ctx.shard_rows(
+            _randomize_importance(self._inner.state, sub))
         return self._inner.begin_epoch(epoch)
 
     def observe(self, indices, loss, pa, pc, epoch: int) -> None:
@@ -92,11 +111,13 @@ class RandomStrategy(SampleStrategy):
 
     def state_dict(self) -> dict:
         return {"arrays": {"state": self._inner.state,
-                           "inner_key": self._inner.key_data()},
-                "host": {"rng": rng_state(self._rng)}}
+                           "inner_key": self._inner.key_data(),
+                           "rng_key": planops.key_data(self._key)},
+                "host": {"rng_impl": planops.KEY_IMPL}}
 
     def load_state_dict(self, state: dict) -> None:
         self._inner.state = self._inner.ctx.shard_rows(
             jax.tree.map(jnp.asarray, state["arrays"]["state"]))
         self._inner.load_key_data(state["arrays"]["inner_key"])
-        set_rng_state(self._rng, state["host"]["rng"])
+        self._key = self._inner.ctx.replicate(
+            planops.restore_key(state, self.seed, "random"))

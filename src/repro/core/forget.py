@@ -6,20 +6,27 @@ SampleState).  Then prune the fraction F of the *least-forgettable* samples
 (fewest forgetting events, ties broken by never-misclassified first) and
 restart training from epoch 0 on the pruned set.  Total reported cost must
 include the warmup epochs (paper Sec. 4.2).
+
+Planning is device-resident (``core/planops.py``): the prune set is the
+stable fewest-events-first rank (``planops.topk_hide``) over the device
+forget-event counts, the epoch shuffle is ``planops.masked_order`` driven by
+a checkpointable PRNG key, and the epoch's index list crosses to the host in
+a single ``jax.device_get``.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import planops
 from repro.core.state import SampleState, init_sample_state, scatter_observations
-from repro.core.strategy import (
-    EpochPlan, SampleStrategy, register_strategy, rng_state, set_rng_state,
-)
+from repro.core.strategy import EpochPlan, SampleStrategy, register_strategy
+from repro.dist.sharding import ParallelCtx
 
 
 @dataclasses.dataclass
@@ -28,14 +35,32 @@ class ForgetConfig:
     warmup_epochs: int = 20
 
 
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def _prune_step(state: SampleState, k: jax.Array, *, mesh=None) -> jax.Array:
+    """Mask of the k least-forgettable samples (stable fewest-events rank).
+
+    Samples that were never correctly predicted count as "infinitely
+    forgettable" (Toneva et al. keep them): they score +inf events.
+    """
+    events = state.forget_events.astype(jnp.float32)
+    ever_correct = state.pa | (state.forget_events > 0)
+    scores = jnp.where(ever_correct, events, jnp.inf)
+    return planops.topk_hide(scores, k, mesh=mesh)
+
+
 class ForgetSampler:
     def __init__(self, num_samples: int, config: ForgetConfig | None = None,
-                 seed: int = 0):
+                 seed: int = 0, ctx: ParallelCtx | None = None):
         self.config = config or ForgetConfig()
-        self.state: SampleState = init_sample_state(num_samples)
-        self._rng = np.random.default_rng(seed)
+        self.ctx = ctx or ParallelCtx()
+        self.ctx.check_rows(num_samples)
+        self.state: SampleState = self.ctx.shard_rows(
+            init_sample_state(num_samples))
+        self._key = self.ctx.replicate(planops.strategy_key(seed, "forget"))
         self._observe = jax.jit(scatter_observations)
-        self.pruned_mask = np.zeros(num_samples, bool)  # True = removed
+        # True = removed; device-resident like the rest of the plan inputs.
+        self.pruned_mask = self.ctx.shard_rows(
+            jnp.zeros((num_samples,), bool))
         self.restarted = False
 
     @property
@@ -50,20 +75,19 @@ class ForgetSampler:
             self.restarted = True
         else:
             self.restarted = False
-        idx = np.arange(self.state.num_samples)[~self.pruned_mask]
-        self._rng.shuffle(idx)
-        return idx
+        self._key, sub = jax.random.split(self._key)
+        order, num_pruned = planops.masked_order(sub, self.pruned_mask,
+                                                 mesh=self.ctx.mesh)
+        # The single host sync of the epoch: the shuffled order + count.
+        order, num_pruned = jax.device_get((order, num_pruned))
+        n = self.state.num_samples
+        return np.asarray(order[: n - int(num_pruned)])
 
     def _prune(self) -> None:
-        events = np.asarray(self.state.forget_events).astype(np.float64)
-        # Samples that were never correctly predicted count as "infinitely
-        # forgettable" (Toneva et al. keep them): give them +inf events.
-        ever_correct = np.asarray(self.state.pa) | (np.asarray(self.state.forget_events) > 0)
-        events = np.where(ever_correct, events, np.inf)
         n = self.state.num_samples
         k = int(np.floor(self.config.fraction * n))
-        order = np.argsort(events, kind="stable")  # fewest events first
-        self.pruned_mask[order[:k]] = True
+        self.pruned_mask = self.ctx.shard_rows(
+            _prune_step(self.state, jnp.int32(k), mesh=self.ctx.mesh))
 
     def observe(self, indices, loss, pa, pc, epoch: int) -> None:
         self.state = self._observe(self.state, jnp.asarray(indices), loss, pa,
@@ -82,9 +106,9 @@ class ForgetStrategy(SampleStrategy):
     fused_observe = staticmethod(scatter_observations)
 
     def __init__(self, num_samples: int, config: ForgetConfig | None = None,
-                 seed: int = 0):
+                 seed: int = 0, ctx: ParallelCtx | None = None):
         super().__init__(num_samples, config, seed)
-        self._inner = ForgetSampler(num_samples, config, seed)
+        self._inner = ForgetSampler(num_samples, config, seed, ctx=ctx)
 
     @property
     def state(self) -> SampleState:
@@ -98,8 +122,8 @@ class ForgetStrategy(SampleStrategy):
 
     def plan(self, epoch: int) -> EpochPlan:
         idx = self._inner.begin_epoch(epoch)
-        # begin_epoch reads forget-event counts at the prune epoch; count
-        # the epoch boundary as one host sync like the other planners.
+        # begin_epoch materialises the shuffled order (and, at the prune
+        # epoch, the device-ranked prune mask) with one device_get.
         return EpochPlan(epoch=epoch, visible_indices=idx,
                          reinit_model=self._inner.should_restart,
                          host_syncs=1)
@@ -109,12 +133,17 @@ class ForgetStrategy(SampleStrategy):
 
     def state_dict(self) -> dict:
         return {"arrays": {"state": self._inner.state,
-                           "pruned": self._inner.pruned_mask},
-                "host": {"rng": rng_state(self._inner._rng),
+                           "pruned": self._inner.pruned_mask,
+                           "rng_key": planops.key_data(self._inner._key)},
+                "host": {"rng_impl": planops.KEY_IMPL,
                          "restarted": bool(self._inner.restarted)}}
 
     def load_state_dict(self, state: dict) -> None:
-        self._inner.state = jax.tree.map(jnp.asarray, state["arrays"]["state"])
-        self._inner.pruned_mask = np.asarray(state["arrays"]["pruned"], bool)
+        self._inner.state = self._inner.ctx.shard_rows(
+            jax.tree.map(jnp.asarray, state["arrays"]["state"]))
+        self._inner.pruned_mask = self._inner.ctx.shard_rows(
+            jnp.asarray(np.asarray(state["arrays"]["pruned"], bool)))
         self._inner.restarted = bool(state["host"]["restarted"])
-        set_rng_state(self._inner._rng, state["host"]["rng"])
+        # restore_key also migrates pre-PlanOps checkpoints (host numpy RNG).
+        self._inner._key = self._inner.ctx.replicate(
+            planops.restore_key(state, self.seed, "forget"))

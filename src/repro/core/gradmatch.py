@@ -16,11 +16,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterator
 
+import jax
 import numpy as np
 
+from repro.core import planops
 from repro.core.strategy import (
-    EpochPlan, FeatsFn, SampleStrategy, register_strategy, rng_state,
-    set_rng_state,
+    EpochPlan, FeatsFn, SampleStrategy, register_strategy,
 )
 
 
@@ -65,7 +66,9 @@ class GradMatchSampler:
         self.config = config or GradMatchConfig()
         self.n = num_samples
         self.num_classes = num_classes
-        self._rng = np.random.default_rng(seed)
+        # Device epoch-shuffle key (planops convention); the OMP itself stays
+        # host-side by design (see module docstring).
+        self._key = planops.strategy_key(seed, "gradmatch")
         self.subset = np.arange(num_samples)
         self.weights = np.ones(num_samples, np.float32)
 
@@ -92,9 +95,13 @@ class GradMatchSampler:
         return True
 
     def begin_epoch(self) -> np.ndarray:
-        idx = self.subset.copy()
-        self._rng.shuffle(idx)
-        return idx
+        # Device shuffle of the frozen subset; the subset length only
+        # changes at a reselection, so the jitted permutation retraces at
+        # most once per R epochs.  One device_get = the epoch's host sync.
+        self._key, sub = jax.random.split(self._key)
+        order = jax.device_get(
+            planops.device_permutation(sub, len(self.subset)))
+        return self.subset[np.asarray(order)]
 
     def batches(self, epoch_indices: np.ndarray, batch_size: int) -> Iterator[np.ndarray]:
         for start in range(0, len(epoch_indices) - batch_size + 1, batch_size):
@@ -128,17 +135,21 @@ class GradMatchStrategy(SampleStrategy):
         self._inner.maybe_reselect(epoch, feats, labels)
 
     def plan(self, epoch: int) -> EpochPlan:
-        return EpochPlan(epoch=epoch, visible_indices=self._inner.begin_epoch())
+        return EpochPlan(epoch=epoch,
+                         visible_indices=self._inner.begin_epoch(),
+                         host_syncs=1)
 
     def batch_weights(self, indices: np.ndarray) -> np.ndarray:
         return self._inner.weights[indices]
 
     def state_dict(self) -> dict:
         return {"arrays": {"subset": self._inner.subset,
-                           "weights": self._inner.weights},
-                "host": {"rng": rng_state(self._inner._rng)}}
+                           "weights": self._inner.weights,
+                           "rng_key": planops.key_data(self._inner._key)},
+                "host": {"rng_impl": planops.KEY_IMPL}}
 
     def load_state_dict(self, state: dict) -> None:
         self._inner.subset = np.asarray(state["arrays"]["subset"])
         self._inner.weights = np.asarray(state["arrays"]["weights"], np.float32)
-        set_rng_state(self._inner._rng, state["host"]["rng"])
+        # restore_key also migrates pre-PlanOps checkpoints (host numpy RNG).
+        self._inner._key = planops.restore_key(state, self.seed, "gradmatch")

@@ -9,20 +9,27 @@ adjustment.  No pruning during the final ``anneal`` fraction of training
 
 Included because the paper positions itself against it (App. C.4): having
 both in one framework lets the comparison run under identical substrates.
+
+Planning is device-resident (``core/planops.py``): the below-mean soft prune
+(``planops.weighted_keep``) and the visible-first epoch shuffle
+(``planops.masked_order``) are one jitted plan step on the device
+``SampleState``, driven by a checkpointable PRNG key; the epoch order, prune
+count and rescale weights cross to the host in a single ``jax.device_get``.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import planops
 from repro.core.state import SampleState, init_sample_state, scatter_observations
-from repro.core.strategy import (
-    EpochPlan, SampleStrategy, register_strategy, rng_state, set_rng_state,
-)
+from repro.core.strategy import EpochPlan, SampleStrategy, register_strategy
+from repro.dist.sharding import ParallelCtx
 
 
 @dataclasses.dataclass
@@ -32,33 +39,56 @@ class InfoBatchConfig:
     total_epochs: int = 100
 
 
+@functools.partial(jax.jit, static_argnames=("annealed", "mesh"))
+def _plan_step(state: SampleState, key: jax.Array, prune_ratio: float, *,
+               annealed: bool, mesh=None):
+    """Device epoch plan: soft prune + rescale weights + epoch shuffle.
+
+    Returns (order with kept samples first, prune count, weights).  During
+    the anneal phase (static per-epoch flag) the prune mask is empty and the
+    weights uniform; with nothing observed yet ``weighted_keep`` yields the
+    same (no below-mean set), so cold-start epochs train on everything.
+    """
+    n = state.num_samples
+    k_prune, k_shuffle = jax.random.split(key)
+    if annealed:
+        prune = jnp.zeros((n,), bool)
+        weights = jnp.ones((n,), jnp.float32)
+    else:
+        prune, weights = planops.weighted_keep(
+            k_prune, state.loss, state.seen >= 0, prune_ratio, mesh=mesh)
+    order, num_prune = planops.masked_order(k_shuffle, prune, mesh=mesh)
+    return order, num_prune, weights
+
+
 class InfoBatchSampler:
     def __init__(self, num_samples: int, config: InfoBatchConfig | None = None,
-                 seed: int = 0):
+                 seed: int = 0, ctx: ParallelCtx | None = None):
         self.config = config or InfoBatchConfig()
-        self.state: SampleState = init_sample_state(num_samples, init_loss=1e9)
-        self._rng = np.random.default_rng(seed)
+        self.ctx = ctx or ParallelCtx()
+        self.ctx.check_rows(num_samples)
+        self.state: SampleState = self.ctx.shard_rows(
+            init_sample_state(num_samples, init_loss=1e9))
+        self._key = self.ctx.replicate(planops.strategy_key(seed, "infobatch"))
         self._observe = jax.jit(scatter_observations)
         self.weights = np.ones(num_samples, np.float32)
 
-    def begin_epoch(self, epoch: int) -> np.ndarray:
+    def begin_epoch(self, epoch: int) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (shuffled kept indices, sorted pruned indices)."""
         c = self.config
         n = self.state.num_samples
-        self.weights = np.ones(n, np.float32)
-        seen = np.asarray(self.state.seen) >= 0
         annealed = epoch >= int(c.anneal * c.total_epochs)
-        if not seen.any() or annealed:
-            idx = np.arange(n)
-        else:
-            loss = np.asarray(self.state.loss)
-            mean = loss[seen].mean()
-            below = seen & (loss < mean)
-            prune = below & (self._rng.random(n) < c.prune_ratio)
-            # kept below-mean samples are up-weighted: unbiased expectation
-            self.weights[below & ~prune] = 1.0 / (1.0 - c.prune_ratio)
-            idx = np.arange(n)[~prune]
-        self._rng.shuffle(idx)
-        return idx
+        self._key, sub = jax.random.split(self._key)
+        order, num_prune, weights = _plan_step(
+            self.state, sub, c.prune_ratio, annealed=annealed,
+            mesh=self.ctx.mesh)
+        # The single host sync of the epoch: order + count + weights.
+        order, num_prune, weights = jax.device_get(
+            (order, num_prune, weights))
+        self.weights = np.asarray(weights)
+        num_prune = int(num_prune)
+        order = np.asarray(order)
+        return order[: n - num_prune], np.sort(order[n - num_prune:])
 
     def sample_weights(self, indices: np.ndarray) -> np.ndarray:
         return self.weights[indices]
@@ -80,12 +110,13 @@ class InfoBatchStrategy(SampleStrategy):
     fused_observe = staticmethod(scatter_observations)
 
     def __init__(self, num_samples: int, config: InfoBatchConfig | None = None,
-                 seed: int = 0, total_epochs: int | None = None):
+                 seed: int = 0, total_epochs: int | None = None,
+                 ctx: ParallelCtx | None = None):
         cfg = config or InfoBatchConfig()
         if total_epochs is not None:
             cfg = dataclasses.replace(cfg, total_epochs=total_epochs)
         super().__init__(num_samples, cfg, seed)
-        self._inner = InfoBatchSampler(num_samples, cfg, seed)
+        self._inner = InfoBatchSampler(num_samples, cfg, seed, ctx=ctx)
 
     @property
     def state(self) -> SampleState:
@@ -98,9 +129,11 @@ class InfoBatchStrategy(SampleStrategy):
         self._inner.state = state
 
     def plan(self, epoch: int) -> EpochPlan:
-        # begin_epoch materialises loss/seen for the pruning: 1 host sync.
-        return EpochPlan(epoch=epoch,
-                         visible_indices=self._inner.begin_epoch(epoch),
+        # begin_epoch materialises the plan with one device_get: 1 host sync.
+        visible, pruned = self._inner.begin_epoch(epoch)
+        return EpochPlan(epoch=epoch, visible_indices=visible,
+                         hidden_indices=pruned,
+                         hidden_fraction=len(pruned) / self.num_samples,
                          host_syncs=1)
 
     def observe(self, indices, loss, pa, pc, epoch: int) -> None:
@@ -112,9 +145,13 @@ class InfoBatchStrategy(SampleStrategy):
     def state_dict(self) -> dict:
         # weights are not saved: begin_epoch() rebuilds them from the state
         # before any weight lookup after a restore.
-        return {"arrays": {"state": self._inner.state},
-                "host": {"rng": rng_state(self._inner._rng)}}
+        return {"arrays": {"state": self._inner.state,
+                           "rng_key": planops.key_data(self._inner._key)},
+                "host": {"rng_impl": planops.KEY_IMPL}}
 
     def load_state_dict(self, state: dict) -> None:
-        self._inner.state = jax.tree.map(jnp.asarray, state["arrays"]["state"])
-        set_rng_state(self._inner._rng, state["host"]["rng"])
+        self._inner.state = self._inner.ctx.shard_rows(
+            jax.tree.map(jnp.asarray, state["arrays"]["state"]))
+        # restore_key also migrates pre-PlanOps checkpoints (host numpy RNG).
+        self._inner._key = self._inner.ctx.replicate(
+            planops.restore_key(state, self.seed, "infobatch"))

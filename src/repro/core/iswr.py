@@ -5,20 +5,27 @@ to the (lagging) per-sample loss; the model therefore sees the same number of
 samples per epoch as the baseline (paper Sec. 4, "ISWR").  Optional unbiasing
 weights w_i = 1/(N p_i) are available (the paper's plain variant leaves them
 off, matching [11]'s practical recipe with loss-proportional probabilities).
+
+Planning is device-resident (``core/planops.py``): the draw probabilities
+and the inverse-CDF with-replacement draw are one jitted plan step over the
+device ``SampleState``, driven by a checkpointable PRNG key; the epoch's
+index list and probabilities cross to the host in a single
+``jax.device_get``.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import planops
 from repro.core.state import SampleState, init_sample_state, scatter_observations
-from repro.core.strategy import (
-    EpochPlan, SampleStrategy, register_strategy, rng_state, set_rng_state,
-)
+from repro.core.strategy import EpochPlan, SampleStrategy, register_strategy
+from repro.dist.sharding import ParallelCtx
 
 
 @dataclasses.dataclass
@@ -28,26 +35,37 @@ class ISWRConfig:
     unbiased: bool = False    # multiply per-sample loss by 1/(N p_i)
 
 
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def _plan_step(state: SampleState, key: jax.Array, smoothing: float, *,
+               mesh=None):
+    """Device epoch plan: loss-proportional probabilities + N draws."""
+    p = planops.importance_probs(state.loss, state.seen >= 0, smoothing,
+                                 mesh=mesh)
+    return planops.with_replacement(key, p, mesh=mesh), p
+
+
 class ISWRSampler:
     def __init__(self, num_samples: int, config: ISWRConfig | None = None,
-                 seed: int = 0):
+                 seed: int = 0, ctx: ParallelCtx | None = None):
         self.config = config or ISWRConfig()
-        self.state: SampleState = init_sample_state(num_samples, init_loss=1.0)
-        self._rng = np.random.default_rng(seed)
+        self.ctx = ctx or ParallelCtx()
+        self.ctx.check_rows(num_samples)
+        self.state: SampleState = self.ctx.shard_rows(
+            init_sample_state(num_samples, init_loss=1.0))
+        self._key = self.ctx.replicate(planops.strategy_key(seed, "iswr"))
         self._observe = jax.jit(scatter_observations)
         self._last_p = np.full(num_samples, 1.0 / num_samples)
 
     def begin_epoch(self, epoch: int) -> np.ndarray:
         """Return N with-replacement indices for this epoch."""
-        loss = np.asarray(self.state.loss)
-        # Never-seen samples get the mean seen loss (neutral importance).
-        seen = np.asarray(self.state.seen) >= 0
-        fill = loss[seen].mean() if seen.any() else 1.0
-        loss = np.where(seen, loss, fill) + self.config.smoothing
-        p = loss / loss.sum()
-        self._last_p = p
-        n = self.state.num_samples
-        return self._rng.choice(n, size=n, replace=True, p=p)
+        self._key, sub = jax.random.split(self._key)
+        draw, p = _plan_step(self.state, sub, self.config.smoothing,
+                             mesh=self.ctx.mesh)
+        # The single host sync of the epoch: the draw + its probabilities
+        # (kept for the optional unbiasing weight lookup).
+        draw, p = jax.device_get((draw, p))
+        self._last_p = np.asarray(p)
+        return np.asarray(draw)
 
     def sample_weights(self, indices: np.ndarray) -> np.ndarray:
         if not self.config.unbiased:
@@ -72,9 +90,9 @@ class ISWRStrategy(SampleStrategy):
     fused_observe = staticmethod(scatter_observations)
 
     def __init__(self, num_samples: int, config: ISWRConfig | None = None,
-                 seed: int = 0):
+                 seed: int = 0, ctx: ParallelCtx | None = None):
         super().__init__(num_samples, config, seed)
-        self._inner = ISWRSampler(num_samples, config, seed)
+        self._inner = ISWRSampler(num_samples, config, seed, ctx=ctx)
 
     @property
     def state(self) -> SampleState:
@@ -87,7 +105,7 @@ class ISWRStrategy(SampleStrategy):
         self._inner.state = state
 
     def plan(self, epoch: int) -> EpochPlan:
-        # begin_epoch materialises the loss array for the draw: 1 host sync.
+        # begin_epoch materialises the draw with one device_get: 1 host sync.
         return EpochPlan(epoch=epoch,
                          visible_indices=self._inner.begin_epoch(epoch),
                          host_syncs=1)
@@ -101,9 +119,13 @@ class ISWRStrategy(SampleStrategy):
     def state_dict(self) -> dict:
         # _last_p is not saved: begin_epoch() recomputes it from the state
         # before any weight lookup after a restore.
-        return {"arrays": {"state": self._inner.state},
-                "host": {"rng": rng_state(self._inner._rng)}}
+        return {"arrays": {"state": self._inner.state,
+                           "rng_key": planops.key_data(self._inner._key)},
+                "host": {"rng_impl": planops.KEY_IMPL}}
 
     def load_state_dict(self, state: dict) -> None:
-        self._inner.state = jax.tree.map(jnp.asarray, state["arrays"]["state"])
-        set_rng_state(self._inner._rng, state["host"]["rng"])
+        self._inner.state = self._inner.ctx.shard_rows(
+            jax.tree.map(jnp.asarray, state["arrays"]["state"]))
+        # restore_key also migrates pre-PlanOps checkpoints (host numpy RNG).
+        self._inner._key = self._inner.ctx.replicate(
+            planops.restore_key(state, self.seed, "iswr"))

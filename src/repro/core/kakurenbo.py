@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import planops
 from repro.core import selection as sel
 from repro.core.schedule import FractionSchedule, kakurenbo_lr
 from repro.core.state import SampleState, init_sample_state, scatter_observations, with_hidden
@@ -123,16 +124,13 @@ class KakurenboSampler:
                  seed: int = 0, ctx: ParallelCtx | None = None):
         self.config = config or KakurenboConfig()
         self.ctx = ctx or ParallelCtx()
-        if self.ctx.mesh is not None and num_samples % self.ctx.dp_size:
-            raise ValueError(
-                f"num_samples={num_samples} must be a multiple of the "
-                f"data-parallel degree {self.ctx.dp_size} to row-shard "
-                "SampleState")
+        self.ctx.check_rows(num_samples)
         # Row-sharded over the data axes under a mesh; plain device arrays
         # otherwise (shard_rows is the identity with no mesh).
         self.state: SampleState = self.ctx.shard_rows(
             init_sample_state(num_samples))
-        self._key = self.ctx.replicate(jax.random.key(seed))
+        # The unified planops seeding convention (one key per strategy name).
+        self._key = self.ctx.replicate(planops.strategy_key(seed, "kakurenbo"))
         # Host round trips involving SampleState: host-dispatched observe
         # scatters + per-epoch plan materialisations. The fused trainer path
         # keeps this at 1/epoch; the legacy path pays 1/batch on top.
@@ -229,11 +227,10 @@ class KakurenboSampler:
 
     def key_data(self) -> jax.Array:
         """Serializable uint32 view of the epoch-shuffle PRNG key."""
-        return jax.random.key_data(self._key)
+        return planops.key_data(self._key)
 
     def load_key_data(self, data) -> None:
-        self._key = self.ctx.replicate(jax.random.wrap_key_data(
-            jnp.asarray(data, jnp.uint32), impl="threefry2x32"))
+        self._key = self.ctx.replicate(planops.load_key(data))
 
 
 @register_strategy("kakurenbo")

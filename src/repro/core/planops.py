@@ -1,0 +1,391 @@
+"""PlanOps: the shared device-resident epoch-planning library.
+
+Every strategy's ``plan()`` used to be a private pile of host numpy —
+``np.random.default_rng`` shuffles, ``np.argsort`` ranks, host-side masks —
+which forced the seven comparison baselines onto the slower host loop while
+KAKURENBO itself planned on device (PR 2-4).  This module extracts that
+planning math into composable jitted ops over ``(loss, confidence, aux)``
+score arrays so *every* strategy plans the same way the KAKURENBO
+``_plan_step`` does:
+
+- one checkpointable device PRNG key per strategy (``strategy_key`` — the
+  single seeding convention, replacing the scattered ``seed`` / ``seed + 1``
+  host generators),
+- selection as pure array ops (``threshold_mask`` / ``topk_hide`` /
+  ``weighted_keep`` / ``stable_rank_order`` / ``with_replacement``), sharing
+  the histogram-CDF core — and its Pallas kernel path
+  (``kernels/threshold_select.py``) — with ``core/selection.py``,
+- the epoch order as one fixed-shape permutation (``masked_order``: a
+  uniform shuffle stable-sorted so masked-out samples trail), materialised
+  to the host ``EpochPlan`` with a single ``jax.device_get``.
+
+Sharding: each op takes an optional static ``mesh``.  With a mesh, score
+inputs are first constrained to a *replicated* layout, so the reduction
+trees (means, cumsums, sorts) are exactly the single-device computation on
+every shard — plans are bit-identical across mesh sizes, the same guarantee
+the chunk-major gradient fold gives the train step.  This is the O(N)-gather
+regime of the paper-faithful ``"sort"`` plan; the O(bins)-communication
+regime stays available through ``histogram_masks``, which runs unchanged
+inside a ``shard_map`` with ``axis_names`` (how ``core/selection.py`` and
+``KakurenboSampler._plan_step`` use it).
+
+Checkpointing: keys serialize through ``key_data``/``load_key``.
+``restore_key`` also accepts the *legacy* checkpoint format (a numpy
+``Generator`` state under ``host["rng"]``): the shim derives the device key
+deterministically from the stored generator, so pre-PlanOps strategy state
+dicts still restore — the resumed run is deterministic, but continues on the
+device RNG stream rather than the retired numpy one (see
+``docs/architecture.md``, "Checkpoint migration").
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+#: PRNG implementation pinned for checkpoint stability: key data saved on
+#: one jax version must restore on another.
+KEY_IMPL = "threefry2x32"
+
+#: Histogram resolution of the threshold paths (shared with core/selection).
+HIST_BINS = 512
+
+
+# ---------------------------------------------------------------------------
+# Keys: one seeding convention + checkpoint/migration helpers
+# ---------------------------------------------------------------------------
+
+
+def strategy_key(seed: int, name: str) -> jax.Array:
+    """The device PRNG key for strategy ``name`` at ``seed``.
+
+    Folds a stable hash of the name into the seed key, so strategies sharing
+    one config seed draw from decorrelated streams — the convention that
+    replaces the ad-hoc ``seed`` / ``seed + 1`` numpy generators.
+    """
+    base = jax.random.key(seed, impl=KEY_IMPL)
+    return jax.random.fold_in(base, zlib.crc32(name.encode("utf-8")) & 0x7FFFFFFF)
+
+
+def key_data(key: jax.Array) -> jax.Array:
+    """Serializable uint32 view of a key (checkpoint leaf)."""
+    return jax.random.key_data(key)
+
+
+def load_key(data) -> jax.Array:
+    """Rebuild a key from ``key_data`` output."""
+    return jax.random.wrap_key_data(jnp.asarray(data, jnp.uint32),
+                                    impl=KEY_IMPL)
+
+
+def migrate_legacy_rng(host_state: dict, seed: int, name: str) -> jax.Array:
+    """Derive a device key from a pre-PlanOps numpy ``Generator`` state.
+
+    Deterministic: the same legacy checkpoint always yields the same key (two
+    uint32 words drawn from the restored generator).  The numpy stream itself
+    is retired — a migrated run resumes deterministically but not on the
+    bit-trajectory the legacy host planner would have produced.
+    """
+    try:
+        g = np.random.default_rng(0)
+        g.bit_generator.state = host_state
+        words = g.integers(0, 2 ** 32, size=2, dtype=np.int64).astype(np.uint32)
+    except (KeyError, TypeError, ValueError):
+        # Unrecognisable legacy payload: fall back to the seed convention.
+        return strategy_key(seed, name)
+    return load_key(words)
+
+
+def restore_key(state: dict, seed: int, name: str,
+                leaf: str = "rng_key") -> jax.Array:
+    """Key from a strategy ``state_dict`` — current or legacy format.
+
+    Current checkpoints carry ``arrays[leaf]`` (``key_data``); legacy ones
+    carry a numpy generator state under ``host["rng"]`` and are migrated via
+    ``migrate_legacy_rng``.
+    """
+    arrays = state.get("arrays") or {}
+    host = state.get("host") or {}
+    if leaf in arrays:
+        return load_key(arrays[leaf])
+    if "rng" in host:
+        return migrate_legacy_rng(host["rng"], seed, name)
+    raise ValueError(
+        f"state dict for {name!r} has neither arrays[{leaf!r}] nor a legacy "
+        "host['rng'] entry — cannot restore the plan RNG")
+
+
+# ---------------------------------------------------------------------------
+# Sharding helper
+# ---------------------------------------------------------------------------
+
+
+def _rep(x, mesh):
+    """Constrain to a replicated layout under ``mesh`` (identity otherwise).
+
+    Replication is what makes plan math mesh-size-invariant: reductions over
+    a replicated array are the single-device computation on every shard, so
+    a ``(8,)`` mesh produces bit-identical plans to ``(1,)``.
+    """
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
+
+
+# ---------------------------------------------------------------------------
+# Permutations / ordering
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def device_permutation(key: jax.Array, n: int) -> jax.Array:
+    """Uniform permutation of ``range(n)`` — the epoch shuffle."""
+    return jax.random.permutation(key, n)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def masked_order(key: jax.Array, mask: jax.Array, *, mesh=None):
+    """Shuffled epoch order with masked-out samples trailing.
+
+    Returns ``(order, num_masked)``: ``order`` is a uniform permutation
+    stable-sorted by ``mask`` so the kept (False) entries come first in
+    shuffled order — one fixed-shape array instead of two ragged ones, the
+    same trick ``KakurenboSampler._plan_step`` uses for its visible/hidden
+    split.  ``order[:n - num_masked]`` is the epoch's visible index list.
+    """
+    mask = _rep(mask, mesh)
+    n = mask.shape[0]
+    perm = jax.random.permutation(key, n)
+    order = perm[jnp.argsort(mask[perm], stable=True)]
+    return order, jnp.sum(mask).astype(jnp.int32)
+
+
+@jax.jit
+def stable_rank_order(scores: jax.Array) -> jax.Array:
+    """Rank of each sample under a *stable* ascending sort (0 = smallest).
+
+    Ties break by index — FORGET's fewest-events-first order (Toneva et al.),
+    where the tie-break is part of the published recipe.
+    """
+    n = scores.shape[0]
+    order = jnp.argsort(scores, stable=True)
+    return jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def topk_hide(scores: jax.Array, k: jax.Array, *, mesh=None) -> jax.Array:
+    """Mask of the ``k`` smallest scores (stable ties) — FORGET's prune set."""
+    scores = _rep(scores, mesh)
+    return stable_rank_order(scores) < k
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def importance_probs(loss: jax.Array, valid: jax.Array, smoothing: float,
+                     *, mesh=None) -> jax.Array:
+    """Loss-proportional draw probabilities (ISWR).
+
+    Never-seen samples take the mean seen loss (neutral importance, 1.0 when
+    nothing is seen yet); ``smoothing`` keeps zero-loss samples drawable.
+    """
+    loss, valid = _rep(loss, mesh), _rep(valid, mesh)
+    cnt = jnp.sum(valid)
+    fill = jnp.where(
+        cnt > 0,
+        jnp.sum(jnp.where(valid, loss, 0.0)) / jnp.maximum(cnt, 1), 1.0)
+    smoothed = jnp.where(valid, loss, fill) + smoothing
+    return smoothed / jnp.sum(smoothed)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def with_replacement(key: jax.Array, p: jax.Array, *, mesh=None) -> jax.Array:
+    """N categorical draws *with replacement* from probabilities ``p`` (N,).
+
+    Inverse-CDF sampling: O(N log N), fixed shapes — the device replacement
+    for ``np.random.Generator.choice(..., replace=True, p=p)``.
+    """
+    p = _rep(p, mesh)
+    n = p.shape[0]
+    cdf = jnp.cumsum(p)
+    u = jax.random.uniform(key, (n,), jnp.float32, 0.0, cdf[-1])
+    idx = jnp.searchsorted(cdf, u, side="right")
+    return jnp.clip(idx, 0, n - 1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def weighted_keep(key: jax.Array, loss: jax.Array, valid: jax.Array,
+                  prune_ratio: float, *, mesh=None):
+    """InfoBatch soft pruning: ``(prune_mask, weights)``.
+
+    Randomly prunes fraction ``prune_ratio`` of the *below-mean* valid
+    samples and up-weights every kept below-mean sample by ``1/(1-r)`` so
+    the expected gradient is unbiased.  With nothing valid the mask is empty
+    and the weights are uniform.
+    """
+    loss, valid = _rep(loss, mesh), _rep(valid, mesh)
+    cnt = jnp.sum(valid)
+    mean = jnp.sum(jnp.where(valid, loss, 0.0)) / jnp.maximum(cnt, 1)
+    below = valid & (loss < mean)
+    u = jax.random.uniform(key, loss.shape)
+    prune = below & (u < prune_ratio)
+    weights = jnp.where(below & ~prune, 1.0 / (1.0 - prune_ratio),
+                        1.0).astype(jnp.float32)
+    return prune, weights
+
+
+# ---------------------------------------------------------------------------
+# Threshold selection (the histogram-CDF core shared with core/selection)
+# ---------------------------------------------------------------------------
+
+
+def _axis_reduce(x, axis_names, op):
+    for ax in axis_names:
+        x = op(x, ax)
+    return x
+
+
+def sort_low_mask(loss: jax.Array, fraction: jax.Array) -> jax.Array:
+    """Candidate mask of the ``floor(fraction*N)`` lowest losses (argsort).
+
+    The paper-faithful O(N log N) path; under GSPMD it is a global argsort
+    (the O(N) gather the paper's own method costs).
+    """
+    n = loss.shape[0]
+    fraction = jnp.asarray(fraction, jnp.float32)
+    num_hide = jnp.floor(fraction * n).astype(jnp.int32)
+    order = jnp.argsort(loss)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+    return rank < num_hide
+
+
+def sort_high_mask(loss: jax.Array, valid: jax.Array,
+                   fraction: float) -> jax.Array:
+    """Mask of the highest-loss ``fraction`` among valid samples (DropTop).
+
+    Invalid samples must not occupy the top-rank window (their sentinel
+    losses sort above every real loss), so they rank below everything.
+    """
+    n = loss.shape[0]
+    num_top = jnp.floor(jnp.asarray(fraction) * n).astype(jnp.int32)
+    order_top = jnp.argsort(jnp.where(valid, loss, -jnp.inf))
+    rank_top = jnp.zeros((n,), jnp.int32).at[order_top].set(
+        jnp.arange(n, dtype=jnp.int32))
+    return (rank_top >= n - num_top) & valid
+
+
+def histogram_masks(
+    loss: jax.Array,
+    valid: jax.Array,
+    low_fraction: jax.Array,
+    high_fraction: float = 0.0,
+    *,
+    bins: int = HIST_BINS,
+    axis_names: tuple[str, ...] = (),
+    use_kernel: bool = False,
+):
+    """Histogram-CDF threshold masks: ``(low_mask, high_mask)``.
+
+    One O(N) pass builds the loss histogram (optionally with the Pallas
+    streaming kernels of ``kernels/threshold_select.py``); the CDF walk
+    yields the lowest-loss candidate mask for ``low_fraction`` and — when
+    ``high_fraction > 0`` — the mirrored top-tail mask (DropTop).  Inside a
+    ``shard_map`` over ``axis_names`` the histogram is psum'd, so every shard
+    derives the same global thresholds from O(bins) communicated scalars.
+
+    The boundary bin is included only if excluding it would under-fill by
+    more than half its population — overshoot is bounded by one bin, and
+    undershoot is always legal (F is a ceiling, paper Sec. 3.1).
+    """
+    n_local = loss.shape[0]
+    low_fraction = jnp.asarray(low_fraction, jnp.float32)
+
+    psum = functools.partial(_axis_reduce, axis_names=axis_names,
+                             op=jax.lax.psum)
+    pmin = functools.partial(_axis_reduce, axis_names=axis_names,
+                             op=jax.lax.pmin)
+    pmax = functools.partial(_axis_reduce, axis_names=axis_names,
+                             op=jax.lax.pmax)
+
+    n_global = psum(jnp.asarray(n_local, jnp.float32))
+    num_hide = jnp.floor(low_fraction * n_global).astype(jnp.int32)
+    big = jnp.float32(3.4e38)
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        lo, hi = kernel_ops.loss_minmax(loss, valid)
+    else:
+        lo = jnp.min(jnp.where(valid, loss, big))
+        hi = jnp.max(jnp.where(valid, loss, -big))
+    lo = pmin(lo)
+    hi = pmax(hi)
+    lo = jnp.minimum(lo, hi)  # degenerate all-invalid shards
+
+    span = jnp.maximum(hi - lo, 1e-12)
+    idx = jnp.clip(((loss - lo) / span * bins).astype(jnp.int32), 0, bins - 1)
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        hist = kernel_ops.loss_histogram(loss, valid, lo, hi, bins)
+    else:
+        hist = jnp.zeros((bins,), jnp.int32).at[idx].add(
+            valid.astype(jnp.int32))
+    hist = psum(hist)
+    cdf = jnp.cumsum(hist)
+    b = jnp.clip(jnp.searchsorted(cdf, num_hide, side="left"), 0, bins - 1)
+    below = jnp.where(b > 0, cdf[jnp.maximum(b - 1, 0)], 0)
+    include_b = (num_hide - below) * 2 >= hist[b]
+    low_mask = jnp.where(include_b, idx <= b, idx < b) & valid
+
+    high_mask = None
+    if high_fraction > 0.0:
+        num_top = jnp.floor(
+            jnp.asarray(high_fraction, jnp.float32) * n_global
+        ).astype(jnp.int32)
+        rcdf = jnp.cumsum(hist[::-1])  # rcdf[j] = count in the top j+1 bins
+        bt = jnp.clip(jnp.searchsorted(rcdf, num_top, side="left"), 0,
+                      bins - 1)
+        b_top = bins - 1 - bt
+        above = jnp.where(bt > 0, rcdf[jnp.maximum(bt - 1, 0)], 0)
+        include_bt = (num_top - above) * 2 >= hist[b_top]
+        high_mask = jnp.where(include_bt, idx >= b_top, idx > b_top) & valid
+    return low_mask, high_mask
+
+
+@functools.partial(
+    jax.jit, static_argnames=("method", "bins", "use_kernel", "mesh"))
+def threshold_mask(
+    loss: jax.Array,
+    valid: jax.Array,
+    fraction: jax.Array | float,
+    *,
+    method: str = "sort",
+    bins: int = HIST_BINS,
+    use_kernel: bool = False,
+    mesh=None,
+) -> jax.Array:
+    """Lowest-loss candidate mask, by any selection method.
+
+    The generic entry point for strategies and tests: ``"sort"`` ranks
+    globally, ``"histogram"``/``"histogram_pallas"`` walk the histogram CDF
+    (``use_kernel`` is implied by the pallas method name).  For the O(bins)
+    cross-shard regime call ``histogram_masks`` inside your own shard_map
+    (as ``core/selection.py`` does); here a mesh only adds the replication
+    constraint.
+    """
+    loss, valid = _rep(loss, mesh), _rep(valid, mesh)
+    if method == "sort":
+        return sort_low_mask(loss, fraction)
+    if method in ("histogram", "histogram_pallas"):
+        low, _ = histogram_masks(
+            loss, valid, fraction, bins=bins,
+            use_kernel=use_kernel or method == "histogram_pallas")
+        return low
+    raise ValueError(f"unknown selection method {method!r}")

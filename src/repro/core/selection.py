@@ -36,9 +36,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import planops
+from repro.core.planops import HIST_BINS  # noqa: F401  (re-export)
 from repro.core.state import SampleState
-
-HIST_BINS = 512
 
 #: Methods accepted by ``select_hidden`` / ``KakurenboConfig.selection``.
 SELECTION_METHODS = ("sort", "histogram", "histogram_pallas")
@@ -77,27 +77,19 @@ def select_hidden_sort(
       (N,) bool hidden mask. The actual hidden fraction F* <= F because of
       move-back.
     """
-    n = state.num_samples
-    max_fraction = jnp.asarray(max_fraction, jnp.float32)
-    num_hide = jnp.floor(max_fraction * n).astype(jnp.int32)
-    # Rank of each sample among the losses (0 = smallest loss).
-    order = jnp.argsort(state.loss)  # O(N log N): the paper's own complexity.
-    rank = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
-    candidate = rank < num_hide
+    # O(N log N) rank of each sample among the losses: the paper's own
+    # complexity (planops.sort_low_mask is the shared implementation).
+    candidate = planops.sort_low_mask(state.loss, max_fraction)
     hidden = candidate & _eligible(state, tau, moveback)
     if drop_top_fraction > 0.0:
-        num_top = jnp.floor(jnp.asarray(drop_top_fraction) * n).astype(jnp.int32)
         # DropTop ignores move-back: these are hard/noisy samples, hidden
         # unconditionally (App. D), but never-seen samples are exempt — and
         # must not *occupy* the top-rank window either (their sentinel
-        # losses sort above every real loss), so rank them below everything:
-        # both histogram paths count only valid samples and this keeps the
-        # three methods agreeing on which tail gets dropped.
-        valid = state.seen >= 0
-        order_top = jnp.argsort(jnp.where(valid, state.loss, -jnp.inf))
-        rank_top = jnp.zeros((n,), jnp.int32).at[order_top].set(
-            jnp.arange(n, dtype=jnp.int32))
-        top = (rank_top >= n - num_top) & valid
+        # losses sort above every real loss), so planops.sort_high_mask
+        # ranks them below everything; both histogram paths count only valid
+        # samples, which keeps the three methods agreeing on the tail.
+        top = planops.sort_high_mask(state.loss, state.seen >= 0,
+                                     drop_top_fraction)
         hidden = hidden | top
     return hidden
 
@@ -151,68 +143,14 @@ def select_hidden_histogram(
     either excluded (undershoot — always safe, F is a ceiling, Sec. 3.1) or
     included when excluding it would under-fill by more than half the bin.
     """
-    n_local = state.num_samples
-    max_fraction = jnp.asarray(max_fraction, jnp.float32)
-    valid = state.seen >= 0
-
-    def _psum(x):
-        for ax in axis_names:
-            x = jax.lax.psum(x, ax)
-        return x
-
-    def _pmin(x):
-        for ax in axis_names:
-            x = jax.lax.pmin(x, ax)
-        return x
-
-    def _pmax(x):
-        for ax in axis_names:
-            x = jax.lax.pmax(x, ax)
-        return x
-
-    n_global = _psum(jnp.asarray(n_local, jnp.float32))
-    num_hide = jnp.floor(max_fraction * n_global).astype(jnp.int32)
-    big = jnp.float32(3.4e38)
-    if use_kernel:
-        from repro.kernels import ops as kernel_ops
-        lo, hi = kernel_ops.loss_minmax(state.loss, valid)
-    else:
-        lo = jnp.min(jnp.where(valid, state.loss, big))
-        hi = jnp.max(jnp.where(valid, state.loss, -big))
-    lo = _pmin(lo)
-    hi = _pmax(hi)
-    lo = jnp.minimum(lo, hi)  # degenerate all-invalid shards
-
-    span = jnp.maximum(hi - lo, 1e-12)
-    idx = jnp.clip(((state.loss - lo) / span * bins).astype(jnp.int32), 0, bins - 1)
-    if use_kernel:
-        hist = kernel_ops.loss_histogram(state.loss, valid, lo, hi, bins)
-    else:
-        hist = jnp.zeros((bins,), jnp.int32).at[idx].add(valid.astype(jnp.int32))
-    hist = _psum(hist)
-    cdf = jnp.cumsum(hist)
-    b = jnp.clip(jnp.searchsorted(cdf, num_hide, side="left"), 0, bins - 1)
-    # Hide everything strictly below bin b; within bin b we would need a rank
-    # tie-break to hit num_hide exactly — hiding the whole boundary bin can
-    # overshoot by at most one bin's population, and undershooting is always
-    # safe (F is a ceiling, Sec. 3.1), so we include bin b only if the CDF up
-    # to b-1 under-fills by more than half of bin b.
-    below = jnp.where(b > 0, cdf[jnp.maximum(b - 1, 0)], 0)
-    include_b = (num_hide - below) * 2 >= hist[b]
-    candidate = jnp.where(include_b, idx <= b, idx < b) & valid
+    # The histogram-CDF core (range pass, binning, psum, boundary-bin rule,
+    # optional mirrored DropTop walk) is shared with the generic PlanOps
+    # library — see planops.histogram_masks for the boundary-bin contract.
+    candidate, top = planops.histogram_masks(
+        state.loss, state.seen >= 0, max_fraction, drop_top_fraction,
+        bins=bins, axis_names=axis_names, use_kernel=use_kernel)
     hidden = candidate & _eligible(state, tau, moveback)
-    if drop_top_fraction > 0.0:
-        # DropTop: the same CDF walk mirrored from the top bin down. Like
-        # the sort path, it ignores move-back but exempts never-seen samples.
-        num_top = jnp.floor(
-            jnp.asarray(drop_top_fraction, jnp.float32) * n_global
-        ).astype(jnp.int32)
-        rcdf = jnp.cumsum(hist[::-1])  # rcdf[j] = count in the top j+1 bins
-        bt = jnp.clip(jnp.searchsorted(rcdf, num_top, side="left"), 0, bins - 1)
-        b_top = bins - 1 - bt
-        above = jnp.where(bt > 0, rcdf[jnp.maximum(bt - 1, 0)], 0)
-        include_bt = (num_top - above) * 2 >= hist[b_top]
-        top = jnp.where(include_bt, idx >= b_top, idx > b_top) & valid
+    if top is not None:
         hidden = hidden | top
     return hidden
 

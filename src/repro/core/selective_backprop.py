@@ -2,23 +2,31 @@
 
 Forward the whole batch, then backprop only samples selected with probability
 P(select | loss) = percentile(loss)^beta; beta=1 keeps ~50% on average (the
-paper's setting).  Implemented as a per-batch 0/1 weight vector applied to
-the loss, so the backward pass is *masked* — on real hardware the saved work
-comes from re-batching the selected samples; on the roofline we account for
-the reduced backward FLOPs analytically (benchmarks/fig2_speedup.py).
+paper's setting).  The loss percentile is estimated against a running history
+of recent batch losses, as in the reference implementation.
 
-The loss percentile is estimated against a running history of recent batch
-losses, as in the reference implementation.
+Device residency: the forward-then-mask flow is the protocol's *in-step*
+``fused_select`` hook — the trainer computes a forward-only loss inside its
+jitted train step, ``select_step`` turns it into per-sample backward weights
+(0 = dropped, survivors rescaled so the kept mean loss is unbiased) and
+updates the device-resident history ring buffer + PRNG key.  Nothing crosses
+the host mid-epoch, so SB scans (``supports_scan``) like every other
+strategy; on real hardware the saved work comes from re-batching the
+selected samples, and the roofline accounts the reduced backward FLOPs
+analytically (benchmarks/fig2_speedup.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.strategy import (
-    EpochPlan, SampleStrategy, register_strategy, rng_state, set_rng_state,
-)
+from repro.core import planops
+from repro.core.strategy import EpochPlan, SampleStrategy, register_strategy
+from repro.dist.sharding import ParallelCtx
 
 
 @dataclasses.dataclass
@@ -26,60 +34,136 @@ class SBConfig:
     beta: float = 1.0
     history: int = 4096   # sliding window of recent losses for percentiles
     floor: float = 0.05   # minimum selection probability (avoid starving)
+    bootstrap: int = 32   # train on everything until this many losses seen
+
+
+def init_select_state(config: SBConfig, key: jax.Array) -> dict:
+    """Device-resident selection state: history ring buffer + PRNG key.
+
+    Unwritten slots are +inf so they sort past every real loss and never
+    perturb the percentile estimate.
+    """
+    h = config.history
+    return {"hist": jnp.full((h,), jnp.inf, jnp.float32),
+            "count": jnp.zeros((), jnp.int32),
+            "ptr": jnp.zeros((), jnp.int32),
+            "key": key}
+
+
+def select_step(state: dict, loss: jax.Array, *, beta: float, floor: float,
+                bootstrap: int) -> tuple[jax.Array, dict]:
+    """Pure in-step select: ``(state, (B,) loss) -> (weights, state)``.
+
+    The percentile of each loss within the history window drives a Bernoulli
+    keep draw; kept samples are rescaled by B/kept so the batch loss stays
+    unbiased.  During bootstrap (fewer than ``bootstrap`` observed losses)
+    everything trains.  The update appends the batch to the ring buffer and
+    splits the carried key — fully deterministic given the state, which is
+    what makes the flow scan- and checkpoint-safe.
+    """
+    h = state["hist"].shape[0]
+    b = loss.shape[0]
+    loss = loss.astype(jnp.float32)
+    key, sub = jax.random.split(state["key"])
+    filled = jnp.minimum(state["count"], h)
+    sorted_hist = jnp.sort(state["hist"])       # +inf (unwritten) sorts last
+    pct = (jnp.searchsorted(sorted_hist, loss, side="left")
+           / jnp.maximum(filled, 1))
+    prob = jnp.where(state["count"] < bootstrap, 1.0,
+                     jnp.maximum(pct ** beta, floor))
+    keep = (jax.random.uniform(sub, (b,)) < prob).astype(jnp.float32)
+    weights = keep * (b / jnp.maximum(keep.sum(), 1.0))
+    pos = (state["ptr"] + jnp.arange(b, dtype=jnp.int32)) % h
+    new_state = {"hist": state["hist"].at[pos].set(loss),
+                 "count": jnp.minimum(state["count"] + b, jnp.int32(1 << 30)),
+                 "ptr": (state["ptr"] + b) % h,
+                 "key": key}
+    return weights, new_state
 
 
 class SelectiveBackprop:
+    """Host-API wrapper over the device select core (direct/low-level use)."""
+
     def __init__(self, config: SBConfig | None = None, seed: int = 0):
         self.config = config or SBConfig()
-        self._rng = np.random.default_rng(seed)
-        self._hist = np.zeros(0, np.float32)
+        c = self.config
+        self._state = init_select_state(c, planops.strategy_key(seed, "sb"))
+        self._select = jax.jit(functools.partial(
+            select_step, beta=c.beta, floor=c.floor, bootstrap=c.bootstrap))
 
     def select(self, batch_loss: np.ndarray) -> np.ndarray:
         """Return f32 0/1 backward mask for this batch and update history."""
-        c = self.config
-        if len(self._hist) < 32:  # bootstrap: train on everything
-            prob = np.ones_like(batch_loss, np.float64)
-        else:
-            # percentile of each loss within the history window
-            pct = np.searchsorted(np.sort(self._hist), batch_loss) / len(self._hist)
-            prob = np.maximum(pct ** c.beta, c.floor)
-        keep = (self._rng.random(len(batch_loss)) < prob).astype(np.float32)
-        self._hist = np.concatenate([self._hist, batch_loss.astype(np.float32)])[-c.history:]
-        return keep
+        w, self._state = self._select(self._state,
+                                      jnp.asarray(batch_loss, jnp.float32))
+        return (np.asarray(w) > 0).astype(np.float32)
 
 
 @register_strategy("sb")
 class SBStrategy(SampleStrategy):
-    """Forward-then-mask selection as a protocol-level ``select_batch`` hook:
-    the trainer sees ``needs_batch_loss`` and supplies the forward-only
-    losses — no strategy-specific branch in the training loop."""
+    """Forward-then-mask selection as the in-step ``fused_select`` hook: the
+    trainer fuses the forward-only loss and the masked backward into one
+    jitted step — no strategy-specific branch in the training loop, and the
+    whole epoch scans."""
 
     config_cls, config_field = SBConfig, "sb"
-    needs_batch_loss = True
 
     def __init__(self, num_samples: int, config: SBConfig | None = None,
-                 seed: int = 0):
-        super().__init__(num_samples, config, seed)
-        self._inner = SelectiveBackprop(config, seed)
-        self._rng = np.random.default_rng(seed + 1)
+                 seed: int = 0, ctx: ParallelCtx | None = None):
+        super().__init__(num_samples, config or SBConfig(), seed)
+        self.ctx = ctx or ParallelCtx()
+        c = self.config
+        self._sel = self.ctx.replicate(
+            init_select_state(c, planops.strategy_key(seed, "sb")))
+        self._key = self.ctx.replicate(planops.strategy_key(seed, "sb-plan"))
+        self.fused_select = functools.partial(
+            select_step, beta=c.beta, floor=c.floor, bootstrap=c.bootstrap)
 
     def plan(self, epoch: int) -> EpochPlan:
-        idx = np.arange(self.num_samples)
-        self._rng.shuffle(idx)
-        return EpochPlan(epoch=epoch, visible_indices=idx)
+        self._key, sub = jax.random.split(self._key)
+        order = planops.device_permutation(sub, self.num_samples)
+        return EpochPlan(epoch=epoch,
+                         visible_indices=np.asarray(jax.device_get(order)),
+                         host_syncs=1)
 
-    def select_batch(self, indices: np.ndarray,
-                     loss: np.ndarray) -> np.ndarray:
-        """0/1 keep mask rescaled so the kept samples' mean loss is unbiased."""
-        keep = self._inner.select(np.asarray(loss))
-        return keep * (len(keep) / max(keep.sum(), 1.0))
+    def get_device_state(self) -> dict:
+        return self._sel
+
+    def set_device_state(self, state: dict) -> None:
+        self._sel = state
 
     def state_dict(self) -> dict:
-        return {"arrays": {"hist": self._inner._hist},
-                "host": {"rng": rng_state(self._rng),
-                         "inner_rng": rng_state(self._inner._rng)}}
+        sel = self._sel
+        return {"arrays": {"hist": sel["hist"], "count": sel["count"],
+                           "ptr": sel["ptr"],
+                           "sel_key": planops.key_data(sel["key"]),
+                           "rng_key": planops.key_data(self._key)},
+                "host": {"rng_impl": planops.KEY_IMPL}}
 
     def load_state_dict(self, state: dict) -> None:
-        self._inner._hist = np.asarray(state["arrays"]["hist"], np.float32)
-        set_rng_state(self._rng, state["host"]["rng"])
-        set_rng_state(self._inner._rng, state["host"]["inner_rng"])
+        a = state["arrays"]
+        host = state.get("host") or {}
+        h = self.config.history
+        if "rng_key" in a:
+            self._key = self.ctx.replicate(planops.load_key(a["rng_key"]))
+            sel_key = planops.load_key(a["sel_key"])
+            hist = jnp.asarray(a["hist"], jnp.float32)
+            count = jnp.asarray(a["count"], jnp.int32)
+            ptr = jnp.asarray(a["ptr"], jnp.int32)
+        else:
+            # Legacy (pre-PlanOps) format: a growing host history plus two
+            # numpy RNG states.  Write the stored losses into the ring
+            # buffer and derive device keys from the generator states — the
+            # resumed run is deterministic but continues on the device RNG
+            # stream (see planops.migrate_legacy_rng).
+            old = np.asarray(a["hist"], np.float32)[-h:]
+            buf = np.full((h,), np.inf, np.float32)
+            buf[: len(old)] = old
+            hist = jnp.asarray(buf)
+            count = jnp.int32(len(old))
+            ptr = jnp.int32(len(old) % h)
+            self._key = self.ctx.replicate(planops.migrate_legacy_rng(
+                host.get("rng", {}), self.seed, "sb-plan"))
+            sel_key = planops.migrate_legacy_rng(
+                host.get("inner_rng", {}), self.seed, "sb")
+        self._sel = self.ctx.replicate(
+            {"hist": hist, "count": count, "ptr": ptr, "key": sel_key})

@@ -117,11 +117,12 @@ class TrainCarry:
 
     This is the ``lax.scan`` carry of the scanned epoch engine
     (``train/engines.py``): params, optimizer state, the error-feedback
-    residual (None without compression) and the strategy's ``SampleState``
-    (None for stateless strategies) ride through K train steps per dispatch,
-    and per-step loss scalars come back as the scan's stacked outputs — so
-    the whole block costs one dispatch and the losses one ``device_get`` per
-    epoch.  The host-loop engine threads the same four objects through its
+    residual (None without compression) and the strategy's device state
+    (``SampleState``, or a fused-select state pytree; None for stateless
+    strategies) ride through K train steps per dispatch, and per-step
+    (loss, backward-count) scalars come back as the scan's stacked outputs
+    — so the whole block costs one dispatch and the losses one
+    ``device_get`` per epoch.  The host-loop engine threads the same four objects through its
     per-batch jitted step; sharing the structure is what keeps the two
     engines' donation/restart contracts identical (a crash between scan
     blocks leaves a fully live carry to hand back for checkpoint-on-fault).

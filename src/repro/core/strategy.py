@@ -13,18 +13,22 @@ The per-epoch contract (driven by ``train/trainer.py``):
   2. ``plan(epoch) -> EpochPlan``  — the epoch's visible index list plus
      LR scaling, the hidden list, and flags (``needs_refresh`` for
      KAKURENBO's step-D forward pass, ``reinit_model`` for FORGET's
-     restart-after-warmup).
-  3. per batch: either ``batch_weights(indices)`` (static per-sample weights
-     — ISWR/InfoBatch/Grad-Match) or, when ``needs_batch_loss`` is set,
-     ``select_batch(indices, loss)`` after a forward-only pass
-     (Selective-Backprop's forward-then-mask flow).
+     restart-after-warmup).  Planning math is device-resident, composed
+     from ``core/planops.py`` ops and materialised with one
+     ``jax.device_get``.
+  3. per batch: ``batch_weights(indices)`` (static per-sample weights —
+     ISWR/InfoBatch/Grad-Match, a plan-time lookup) and/or the in-step
+     hooks fused into the jitted train step: ``fused_observe`` (bookkeeping
+     scatter) and ``fused_select`` (Selective-Backprop's loss-dependent
+     backward mask).
   4. ``observe(indices, loss, pa, pc, epoch)`` — lagging-loss bookkeeping
-     from the training forward pass.
+     from the training forward pass (host-dispatched legacy path; fused
+     strategies only see it from the step-D refresh loop).
   5. ``on_epoch_end(plan, eval_forward, batch_size) -> int`` — end-of-epoch
      work (hidden-list refresh); returns extra forward-pass samples for the
      work accounting.
-  6. ``state_dict()/load_state_dict()`` — checkpoint/restore, including host
-     RNG states, so a restart resumes the exact trajectory.
+  6. ``state_dict()/load_state_dict()`` — checkpoint/restore, including the
+     device plan RNG keys, so a restart resumes the exact trajectory.
 
 Registration mirrors ``configs/registry.py``::
 
@@ -56,11 +60,14 @@ class EpochPlan:
 
     All index arrays are *host* numpy arrays of global sample ids: the plan
     is the device→host boundary of the selection engine (see
-    ``docs/architecture.md``), materialised once per epoch.
+    ``docs/architecture.md``).  The arrays are *computed* on device — every
+    registered strategy plans through the jitted ``core/planops.py`` ops —
+    and materialised here once per epoch by a single ``jax.device_get``
+    (counted in ``host_syncs``).
     """
 
     epoch: int
-    visible_indices: np.ndarray            # shuffled training index list
+    visible_indices: np.ndarray            # shuffled training index list (host)
     hidden_indices: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0, np.int64))
     max_fraction: float = 0.0              # F_e (ceiling)
@@ -100,7 +107,6 @@ class SampleStrategy:
     name: str = "?"                        # filled in by @register_strategy
     config_cls: type | None = None         # dataclass type of the config
     config_field: str | None = None        # attr name on a composite config
-    needs_batch_loss: bool = False         # SB-style forward-then-select
 
     #: Device-resident observation hook: a *pure* function
     #: ``(state_pytree, indices, loss, pa, pc, epoch) -> state_pytree`` the
@@ -114,6 +120,22 @@ class SampleStrategy:
     #: Strategies exposing this must also implement
     #: ``get_device_state``/``set_device_state``.
     fused_observe: Callable | None = None
+
+    #: Device-resident in-step selection hook: a *pure* function
+    #: ``(state_pytree, loss) -> (weights, state_pytree)`` fused into the
+    #: jitted train step *before* the backward pass.  ``loss`` is the (B,)
+    #: f32 per-sample loss of a forward-only pass at the current params;
+    #: ``weights`` (B,) f32 multiply the per-sample losses in the training
+    #: objective (0 = dropped from the backward pass, counted out of
+    #: ``bwd_samples``).  This is Selective-Backprop's forward-then-mask
+    #: flow without the host round trip: any randomness draws from a PRNG
+    #: key carried *inside* the state pytree, so the whole flow scans and
+    #: checkpoints.  Under the mesh trainer the state is kept replicated
+    #: (it is global history, not per-sample rows) and the loss vector is
+    #: replicated before the hook runs, so selection is identical for every
+    #: mesh size.  Strategies exposing this must also implement
+    #: ``get_device_state``/``set_device_state``.
+    fused_select: Callable | None = None
 
     def __init__(self, num_samples: int, config: Any = None, seed: int = 0):
         self.num_samples = num_samples
@@ -156,52 +178,45 @@ class SampleStrategy:
         host work?
 
         True when the strategy needs nothing from the host between train
-        steps: no forward-then-select flow (``needs_batch_loss``) and no
-        host-side ``observe()`` (either it keeps no per-sample state, or the
-        bookkeeping is expressible as ``fused_observe`` inside the step).
-        ``batch_weights`` does NOT block scanning — it is a plan-time lookup
-        by contract, so the engine pre-gathers every batch's weights into the
-        epoch plan before dispatch.  Strategies that scan must keep these
-        properties in sync with their hooks; the trainer additionally checks
-        that the fused observe is actually active before picking the scanned
-        engine (``TrainConfig.fused_observe=False`` forces the host loop).
+        steps: no host-side ``observe()`` (either it keeps no per-sample
+        state, or the bookkeeping is expressible as ``fused_observe`` inside
+        the step).  Loss-dependent selection does not block scanning either
+        — it is the in-step ``fused_select`` hook.  ``batch_weights`` does
+        NOT block scanning — it is a plan-time lookup by contract, so the
+        engine pre-gathers every batch's weights into the epoch plan before
+        dispatch.  Strategies that scan must keep these properties in sync
+        with their hooks; the trainer additionally checks that the fused
+        observe is actually active before picking the scanned engine
+        (``TrainConfig.fused_observe=False`` forces the host loop).
         """
         observes = type(self).observe is not SampleStrategy.observe
-        return not self.needs_batch_loss and (
-            not observes or self.fused_observe is not None)
+        return not observes or self.fused_observe is not None
 
     def batch_weights(self, indices: np.ndarray) -> np.ndarray | None:
         """Static per-sample loss weights for this batch (None = uniform).
 
         Host numpy in, host numpy (B,) f32 out; looked up from plan-time
         decisions (ISWR unbiasing, InfoBatch 1/(1-r) rescale) — must not
-        touch device state.
-        """
-        return None
-
-    def select_batch(self, indices: np.ndarray,
-                     loss: np.ndarray) -> np.ndarray | None:
-        """Forward-then-mask hook: per-sample backward weights (0 = dropped).
-
-        Only consulted when ``needs_batch_loss`` is True; ``loss`` is the
-        host (B,) f32 vector from a forward-only pass over the batch.
-        ``None`` means uniform: every sample in the batch trains with
-        weight 1 (and must be counted as backward work).
+        touch device state.  Loss-*dependent* per-batch weights are the
+        in-step ``fused_select`` hook instead.
         """
         return None
 
     # -- device-resident state (fused_observe strategies) --------------------
 
     def get_device_state(self):
-        """Pytree of device arrays consumed/produced by ``fused_observe``.
+        """Pytree of device arrays consumed/produced by ``fused_observe`` /
+        ``fused_select``.
 
         The trainer fetches this once after ``plan()``, threads it through
         the jitted train step for the whole epoch (donated, so the strategy's
         own reference may die mid-epoch), and hands the final value back via
-        ``set_device_state`` — zero per-batch host round trips.  Leaves are
-        ``(N, ...)`` per-sample arrays; the mesh trainer keeps them
-        row-sharded over the data axes (``ParallelCtx.rows_spec``), so N
-        must be a multiple of the data-parallel degree.
+        ``set_device_state`` — zero per-batch host round trips.  For
+        ``fused_observe`` the leaves are ``(N, ...)`` per-sample arrays; the
+        mesh trainer keeps them row-sharded over the data axes
+        (``ParallelCtx.rows_spec``), so N must be a multiple of the
+        data-parallel degree.  ``fused_select`` state (global history, PRNG
+        key) is kept replicated instead.
         """
         return None
 

@@ -157,10 +157,22 @@ class ParallelCtx:
             return P()
         return P(dp[0] if len(dp) == 1 else dp)
 
+    def check_rows(self, num_samples: int) -> None:
+        """Fail fast when ``(N, ...)`` per-sample state cannot row-shard.
+
+        Called by every sampler that keeps row-sharded state; off-mesh (or
+        when N divides the data-parallel degree) it is a no-op.
+        """
+        if self.mesh is not None and num_samples % self.dp_size:
+            raise ValueError(
+                f"num_samples={num_samples} must be a multiple of the "
+                f"data-parallel degree {self.dp_size} to row-shard "
+                "SampleState")
+
     def shard_rows(self, tree: Any) -> Any:
         """device_put a pytree of ``(N, ...)`` arrays row-sharded over the
         data axes (e.g. ``SampleState``).  N must be a multiple of
-        ``dp_size``.  Identity with no mesh."""
+        ``dp_size`` (``check_rows``).  Identity with no mesh."""
         if self.mesh is None:
             return tree
         return jax.device_put(tree, NamedSharding(self.mesh, self.rows_spec))

@@ -13,7 +13,6 @@ factor into the step's learning rate.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Iterator
 
 import jax
@@ -21,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig, ShapeSpec
+from repro.configs.base import ArchConfig
 from repro.core.strategy import EpochPlan
 from repro.data.pipeline import worker_slice
 from repro.dist.sharding import ParallelCtx

@@ -11,7 +11,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ParamDef, init_params, rms_norm
+from repro.models.common import ParamDef, init_params
 
 
 @dataclasses.dataclass(frozen=True)

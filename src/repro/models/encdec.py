@@ -7,7 +7,6 @@ Decoder = causal self-attention + cross-attention + gated MLP, scanned.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ trainer, server and dry-run need.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

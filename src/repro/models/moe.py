@@ -13,7 +13,6 @@ Runs in three modes from one code path:
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

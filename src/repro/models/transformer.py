@@ -7,7 +7,6 @@ the ``ParallelCtx`` so the same code runs on 1 CPU device and on the
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax
@@ -20,8 +19,7 @@ from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.common import layer_scan as _scan
 from repro.models.common import (
-    ParamDef, abstract_params, gated_mlp, init_params, logical_tree,
-    rms_norm, stack_defs,
+    ParamDef, gated_mlp, rms_norm, stack_defs,
 )
 
 def _remat_policy(ctx):

@@ -7,11 +7,11 @@ An epoch engine owns *how* the plan is dispatched:
 
 - ``HostLoopEngine`` — the classic loop: one jitted step per batch, batches
   assembled on the host by the ``Pipeline`` and shipped host→device each
-  step.  The only engine that can run per-batch host hooks
-  (``needs_batch_loss`` forward-then-select flows, host ``observe()`` when
-  the fused scatter is off), so it is also the legacy-parity reference.
-  Per-step loss scalars are collected as device arrays and converted to
-  floats once at epoch end — the loop never blocks on a step.
+  step.  The only engine that can run per-batch host hooks (host
+  ``observe()`` when the fused scatter is off), so it is also the
+  legacy-parity reference.  Per-step loss scalars are collected as device
+  arrays and converted to floats once at epoch end — the loop never blocks
+  on a step.
 
 - ``ScanEpochEngine`` — the device-resident epoch: the full dataset is
   placed in device memory once (``Trainer.device_data``), every epoch's
@@ -35,9 +35,14 @@ compilation exactly.  One dispatch still covers K batches, which is where
 the wall-clock win comes from (``benchmarks/step_throughput.py``).
 
 Engine choice (``Trainer._make_engine``) is per strategy capability:
-``SampleStrategy.supports_scan`` strategies run scanned by default
-(``TrainConfig.engine="auto"``, ``device_data=True``); ``needs_batch_loss``
-strategies and the legacy ``fused_observe=False`` path keep the host loop.
+``SampleStrategy.supports_scan`` strategies — all 8 registered ones — run
+scanned by default (``TrainConfig.engine="auto"``, ``device_data=True``);
+only the legacy ``fused_observe=False`` parity path (and host-planned
+external strategies without a fused observe) keep the host loop.
+Loss-dependent selection (Selective-Backprop) is the in-step
+``fused_select`` hook inside ``Trainer._step_core``, so it runs identically
+under either engine; its surviving-sample count comes back as a per-step
+device scalar next to the loss, fetched once per epoch.
 Both engines honour the same crash contract: the latest live train state is
 always handed back (the ``finally`` blocks), so checkpoint-on-fault works
 mid-epoch — at batch granularity in the host loop, at scan-block
@@ -92,12 +97,13 @@ class HostLoopEngine:
     def run_epoch(self, epoch: int, indices: np.ndarray, plan,
                   lr: float) -> EpochRunResult:
         tr = self.tr
-        fwd = bwd = 0
-        losses = []
-        # Fused path: thread the strategy's device state through the jitted
+        fwd = 0
+        losses, bwds = [], []
+        # Fused paths: thread the strategy's device state through the jitted
         # step for the whole epoch; hand it back only at the epoch boundary.
         fuse = tr._fuse
-        dev_state = tr.strategy.get_device_state() if fuse else None
+        dev_state = (tr.strategy.get_device_state() if tr._thread_state
+                     else None)
         # Strategies that don't override observe() (e.g. baseline) keep no
         # per-sample state, so their no-op observe is not a host round trip.
         observes = type(tr.strategy).observe is not SampleStrategy.observe
@@ -106,29 +112,20 @@ class HostLoopEngine:
         try:
             for idx, batch in tr.pipeline.batches(indices):
                 fwd += len(idx)
-                if tr.strategy.needs_batch_loss:
-                    # forward-only pass for selection, then masked backward
-                    lv, _, _ = tr._eval_step(tr.params, batch)
-                    weight = tr.strategy.select_batch(idx, np.asarray(lv))
-                    # None = uniform: the whole batch still takes the
-                    # backward pass, so it must count —
-                    # np.count_nonzero(None) == 0 would silently zero out
-                    # the paper's work accounting.
-                    bwd += (len(idx) if weight is None
-                            else int(np.count_nonzero(weight)))
-                else:
-                    weight = tr.strategy.batch_weights(idx)
-                    bwd += len(idx)
+                weight = tr.strategy.batch_weights(idx)
                 b = dict(batch)
                 if weight is not None:
                     b["weight"] = jnp.asarray(weight, jnp.float32)
                 (tr.params, tr.opt_state, tr.ef_state, dev_state,
-                 scalar, metrics) = tr._train_step(
+                 scalar, bwd, metrics) = tr._train_step(
                     tr.params, tr.opt_state, tr.ef_state, dev_state, b,
                     jnp.asarray(idx), epoch_dev, lr)
-                # Device scalar only — converted to float once at epoch end,
-                # so the loop never blocks on a step's completion.
+                # Device scalars only — converted to floats once at epoch
+                # end, so the loop never blocks on a step's completion.  The
+                # step reports its own backward count (fused-select
+                # strategies train a loss-dependent subset of the batch).
                 losses.append(scalar)
+                bwds.append(bwd)
                 if fuse is None:
                     lv, pa, pc = metrics
                     tr.strategy.observe(idx, lv, pa, pc, epoch)
@@ -140,12 +137,17 @@ class HostLoopEngine:
             # see _all_live for the inside-a-dispatch case), so
             # checkpoint-on-fault (save_checkpoint -> strategy.state_dict)
             # stays valid.
-            if fuse is not None and _all_live(dev_state):
+            if tr._thread_state and _all_live(dev_state):
                 tr.strategy.set_device_state(dev_state)
-        ls = (np.asarray(jax.device_get(losses), np.float64)
-              if losses else np.zeros(0))
-        return EpochRunResult(losses=ls, fwd_samples=fwd, bwd_samples=bwd,
-                              host_syncs=loop_syncs)
+        if losses:
+            # The epoch's single loss/work materialisation.
+            ls, bw = jax.device_get((losses, bwds))
+            ls = np.asarray(ls, np.float64)
+            bwd_total = int(np.sum(np.asarray(bw, np.int64)))
+        else:
+            ls, bwd_total = np.zeros(0), 0
+        return EpochRunResult(losses=ls, fwd_samples=fwd,
+                              bwd_samples=bwd_total, host_syncs=loop_syncs)
 
 
 def scan_block_sizes(num_steps: int, scan_steps: int) -> list[int]:
@@ -204,10 +206,11 @@ class ScanEpochEngine:
                     batch = ctx.constrain_rows(batch)
                 if "w" in x:
                     batch["weight"] = x["w"]
-                params, opt_state, ef, sstate, scalar, _ = step_core(
+                params, opt_state, ef, sstate, scalar, bwd, _ = step_core(
                     c.params, c.opt_state, c.ef, c.sstate, batch, x["idx"],
                     epoch, lr)
-                return TrainCarry(params, opt_state, ef, sstate), scalar
+                return TrainCarry(params, opt_state, ef, sstate), (scalar,
+                                                                   bwd)
             # unroll=True: the K bodies are inlined, reproducing the
             # standalone per-step compilation bit for bit (a rolled while
             # loop compiles the conv grads with different layouts); one
@@ -218,8 +221,8 @@ class ScanEpochEngine:
             # standalone step.  Block length is static at trace time, so
             # this is a plain python branch.
             if jax.tree.leaves(xs)[0].shape[0] == 1:
-                carry, scalar = body(carry, jax.tree.map(lambda a: a[0], xs))
-                return carry, scalar[None]
+                carry, out = body(carry, jax.tree.map(lambda a: a[0], xs))
+                return carry, jax.tree.map(lambda a: a[None], out)
             return jax.lax.scan(body, carry, xs, unroll=True)
 
         self._block = jax.jit(block, donate_argnums=(0,))
@@ -239,8 +242,8 @@ class ScanEpochEngine:
         tr = self.tr
         bs = tr.cfg.batch_size
         w = tr.strategy.batch_weights(np.zeros(bs, np.int64))
-        fuse = tr._fuse
-        dev_state = tr.strategy.get_device_state() if fuse else None
+        dev_state = (tr.strategy.get_device_state() if tr._thread_state
+                     else None)
         # Exactly the shapes run_epoch can dispatch: every block length
         # scan_block_sizes emits for any remainder, plus the full block.
         sizes = sorted({size
@@ -285,19 +288,20 @@ class ScanEpochEngine:
             xs["w"] = self._place_plan(np.stack(
                 [np.ones(c.batch_size, np.float32) if w is None
                  else np.asarray(w, np.float32) for w in w_rows]))
-        fuse = tr._fuse
-        dev_state = tr.strategy.get_device_state() if fuse else None
+        dev_state = (tr.strategy.get_device_state() if tr._thread_state
+                     else None)
         carry = TrainCarry(tr.params, tr.opt_state, tr.ef_state, dev_state)
-        losses = []
+        losses, bwds = [], []
         epoch_dev = jnp.int32(epoch)
         try:
             start = 0
             for size in scan_block_sizes(num_steps, self.scan_steps):
                 xs_block = jax.tree.map(
                     lambda a: a[start : start + size], xs)
-                carry, block_losses = self._block(carry, xs_block, epoch_dev,
-                                                  lr)
+                carry, (block_losses, block_bwds) = self._block(
+                    carry, xs_block, epoch_dev, lr)
                 losses.append(block_losses)
+                bwds.append(block_bwds)
                 start += size
         finally:
             # The scan block donates the whole carry: hand the latest live
@@ -308,12 +312,15 @@ class ScanEpochEngine:
             if _all_live(carry):
                 tr.params, tr.opt_state = carry.params, carry.opt_state
                 tr.ef_state = carry.ef
-                if fuse is not None:
+                if tr._thread_state:
                     tr.strategy.set_device_state(carry.sstate)
-        # The epoch's single loss materialisation: per-step scalars were
-        # accumulated on device across the scan blocks.
-        ls = np.concatenate(
-            [np.asarray(jax.device_get(x), np.float64) for x in losses])
+        # The epoch's single loss/work materialisation: per-step scalars
+        # (loss + the step's backward count) were accumulated on device
+        # across the scan blocks.
+        got_ls, got_bw = jax.device_get((losses, bwds))
+        ls = np.concatenate([np.asarray(x, np.float64) for x in got_ls])
+        bwd = int(np.sum(np.concatenate(
+            [np.asarray(x, np.int64) for x in got_bw])))
         n = num_steps * c.batch_size
-        return EpochRunResult(losses=ls, fwd_samples=n, bwd_samples=n,
+        return EpochRunResult(losses=ls, fwd_samples=n, bwd_samples=bwd,
                               host_syncs=0)

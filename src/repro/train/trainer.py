@@ -32,9 +32,9 @@ contract.)
 The trainer is strategy-agnostic: every selection method — KAKURENBO and
 all baselines — arrives through ``repro.core.make_strategy`` and drives the
 loop exclusively via the protocol (``plan`` / ``observe`` /
-``batch_weights`` / ``select_batch`` / ``on_epoch_end`` /
-``state_dict``).  Adding a strategy never touches this file
-(``docs/adding_a_strategy.md``).
+``batch_weights`` / ``fused_observe`` / ``fused_select`` /
+``on_epoch_end`` / ``state_dict``).  Adding a strategy never touches this
+file (``docs/adding_a_strategy.md``).
 
 The trainer owns: jitted train/eval steps, LR scheduling (incl. Eq. 8 via
 ``plan.lr_scale``), work accounting (fwd/bwd sample counts — the quantity
@@ -55,7 +55,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import checkpoint as ckpt
 from repro.core import (
     ForgetConfig, ISWRConfig, InfoBatchConfig, KakurenboConfig, LRSchedule,
-    SBConfig, GradMatchConfig, SampleStrategy, make_strategy,
+    SBConfig, GradMatchConfig, SampleStrategy, make_strategy, planops,
 )
 from repro.data.pipeline import Pipeline, materialize
 from repro.dist.compression import compress_grads, init_error_feedback
@@ -109,10 +109,11 @@ class TrainConfig:
     # speed over cross-mesh-size reproducibility.
     grad_allreduce: str = "fold"
     # Epoch engine: "auto" runs strategies whose per-batch work fits inside
-    # the jitted step (SampleStrategy.supports_scan + active fused observe)
-    # through the scanned engine, and everything else (needs_batch_loss,
-    # fused_observe=False) through the host loop; "scan"/"host" force one
-    # (forcing "scan" on an incapable strategy raises).
+    # the jitted step (SampleStrategy.supports_scan + active fused observe;
+    # all 8 registered strategies qualify) through the scanned engine, and
+    # everything else (fused_observe=False, host-planned external
+    # strategies) through the host loop; "scan"/"host" force one (forcing
+    # "scan" on an incapable strategy raises).
     engine: str = "auto"
     # Scanned engine: place the full dataset in device memory once and
     # assemble batches by on-device gather (False forces host assembly, i.e.
@@ -162,7 +163,9 @@ class Trainer:
         self.pipeline = Pipeline(dataset.get, cfg.batch_size)
         self.num_samples = dataset.num_samples
         self.ctx = self._build_ctx()
-        self.rng = jax.random.key(cfg.seed)
+        # impl pinned so the checkpointed key restores on any session
+        # (planops.load_key hard-codes the same impl).
+        self.rng = jax.random.key(cfg.seed, impl=planops.KEY_IMPL)
         self.params = init_params(self.rng)
         self.opt_state = self.opt.init(self.params)
         self.ef_state = (init_error_feedback(self.params)
@@ -226,25 +229,46 @@ class Trainer:
     # ------------------------------------------------------------------ setup
 
     def _jit_steps(self):
-        # Fused observe: the strategy's per-batch bookkeeping scatter runs
-        # inside the jitted train step, so SampleState never bounces to the
-        # host mid-epoch. Requires the strategy to expose device state.
+        # Fused hooks: the strategy's per-batch work runs inside the jitted
+        # train step, so its device state never bounces to the host
+        # mid-epoch.  ``fused_observe`` is the bookkeeping scatter (gated by
+        # TrainConfig.fused_observe for the legacy-parity path);
+        # ``fused_select`` is the in-step forward-then-mask selection (SB) —
+        # always active, it has no host equivalent.  Either hook requires
+        # the strategy to expose device state, which the engines then thread
+        # through the epoch.
+        has_dev = self.strategy.get_device_state() is not None
         fuse = (self.strategy.fused_observe
-                if self.cfg.fused_observe
-                and self.strategy.get_device_state() is not None else None)
-        self._fuse = fuse
+                if self.cfg.fused_observe and has_dev else None)
+        fsel = self.strategy.fused_select if has_dev else None
+        self._fuse, self._fsel = fuse, fsel
+        self._thread_state = fuse is not None or fsel is not None
         if self.ctx.mesh is not None:
-            self._jit_steps_mesh(fuse)
+            self._jit_steps_mesh(fuse, fsel)
             self.engine = self._make_engine()
             return
         opt, loss_fn, compress = self.opt, self.loss_fn, self.cfg.grad_compression
+        batch_size = self.cfg.batch_size
 
         # The un-jitted step math, shared by both epoch engines: the host
         # loop jits it per batch, the scanned engine inlines it into its
         # lax.scan blocks — one compilation contract, so the engines are
-        # bit-identical by construction.
+        # bit-identical by construction.  The step reports its backward
+        # sample count as a device scalar (the full batch, or the fused
+        # select's surviving count) so work accounting never syncs mid-epoch.
         def train_step(params, opt_state, ef, sstate, batch, indices, epoch,
                        lr):
+            if fsel is not None:
+                # Forward-only loss at the current params drives the in-step
+                # selection; the chosen weights mask the backward pass.
+                _, (lv0, _, _) = loss_fn(params, batch)
+                w_sel, sstate = fsel(sstate, lv0)
+                batch = dict(batch)
+                batch["weight"] = (batch["weight"] * w_sel
+                                   if "weight" in batch else w_sel)
+                bwd = jnp.count_nonzero(w_sel).astype(jnp.int32)
+            else:
+                bwd = jnp.int32(batch_size)
             (scalar, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch)
             if compress:
@@ -253,7 +277,7 @@ class Trainer:
             if fuse is not None:
                 lv, pa, pc = metrics
                 sstate = fuse(sstate, indices, lv, pa, pc, epoch)
-            return params, opt_state, ef, sstate, scalar, metrics
+            return params, opt_state, ef, sstate, scalar, bwd, metrics
 
         def eval_step(params, batch):
             _, metrics = loss_fn(params, batch)
@@ -271,7 +295,9 @@ class Trainer:
         on device: ``SampleStrategy.supports_scan`` plus an *active* fused
         observe whenever the strategy observes at all
         (``TrainConfig.fused_observe=False`` forces the host loop, keeping
-        the legacy differential-parity path intact).
+        the legacy differential-parity path intact).  There is no per-
+        strategy branch here: all 8 registered strategies scan — loss-
+        dependent selection rides the in-step ``fused_select`` hook.
         """
         s = self.strategy
         observes = type(s).observe is not SampleStrategy.observe
@@ -281,8 +307,8 @@ class Trainer:
         if mode == "scan" and not scannable:
             raise ValueError(
                 f"engine='scan' but strategy {s.name!r} cannot run scanned "
-                "epochs (needs_batch_loss or host-side observe without an "
-                "active fused_observe) — use engine='auto' or 'host'")
+                "epochs (host-side observe without an active fused_observe) "
+                "— use engine='auto' or 'host'")
         if mode == "scan" and not self.cfg.device_data:
             raise ValueError(
                 "engine='scan' requires device_data=True — the scanned "
@@ -310,7 +336,7 @@ class Trainer:
                     {k: jnp.asarray(v) for k, v in arrays.items()})
         return self._device_data
 
-    def _jit_steps_mesh(self, fuse):
+    def _jit_steps_mesh(self, fuse, fsel=None):
         """Mesh-sharded train/eval steps (``TrainConfig.mesh_shape``).
 
         The train step is a shard_map over the ``("data",)`` axis wrapped in
@@ -343,6 +369,13 @@ class Trainer:
           metrics gather + shard-local writes (see
           ``core/state.py::scatter_observations``), and a sharding
           constraint keeps the state from ever gathering to one device.
+        - The fused select (SB) runs *before* the shard_map core: a
+          forward-only GSPMD pass over the sharded batch yields the (B,)
+          loss (per-sample, so bit-identical across mesh sizes — the
+          ``_eval_step`` argument), which is constrained *replicated*
+          together with the select state so the history/percentile/draw
+          math is the single-device computation on every shard; the chosen
+          weights are constrained back to rows and enter the batch.
         """
         ctx = self.ctx
         mesh = ctx.mesh
@@ -413,15 +446,36 @@ class Trainer:
             in_specs=(P(), P(), P(), P("data"), P()),
             out_specs=(P(), P(), P(), P(), P("data")))
 
+        batch_size = self.cfg.batch_size
+        rep_sharding = NamedSharding(mesh, P())
+        rows_sharding = NamedSharding(mesh, ctx.rows_spec)
+
         def train_step(params, opt_state, ef, sstate, batch, indices, epoch,
                        lr):
+            if fsel is not None:
+                _, (lv0, _, _) = loss_fn(params, batch)
+                # Replicate the loss vector and the (global-history) select
+                # state: the selection math is then the exact single-device
+                # computation on every shard — mesh-size-invariant.
+                lv0 = jax.lax.with_sharding_constraint(lv0, rep_sharding)
+                sstate = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(
+                        x, rep_sharding), sstate)
+                w_sel, sstate = fsel(sstate, lv0)
+                bwd = jnp.count_nonzero(w_sel).astype(jnp.int32)
+                w_sel = jax.lax.with_sharding_constraint(w_sel, rows_sharding)
+                batch = dict(batch)
+                batch["weight"] = (batch["weight"] * w_sel
+                                   if "weight" in batch else w_sel)
+            else:
+                bwd = jnp.int32(batch_size)
             params, opt_state, ef, scalar, metrics = core(
                 params, opt_state, ef, batch, lr)
             if fuse is not None:
                 lv, pa, pc = metrics
                 sstate = fuse(sstate, indices, lv, pa, pc, epoch)
                 sstate = ctx.constrain_rows(sstate)
-            return params, opt_state, ef, sstate, scalar, metrics
+            return params, opt_state, ef, sstate, scalar, bwd, metrics
 
         def eval_step(params, batch):
             _, metrics = loss_fn(params, batch)
@@ -520,8 +574,13 @@ class Trainer:
 
     def _ckpt_tree(self, strategy_sd: dict | None = None):
         sd = strategy_sd or self.strategy.state_dict()
+        # The trainer's init key rides the checkpoint: FORGET-style
+        # reinit_model restarts must draw the same fresh params after a
+        # restore even if the restoring process was configured with a
+        # different seed (restore always wins over construction seeds).
         tree = {"params": self.params, "opt_state": self.opt_state,
-                "strategy": sd["arrays"]}
+                "strategy": sd["arrays"],
+                "rng": planops.key_data(self.rng)}
         if self.ef_state is not None:
             # The error-feedback residual is part of the trajectory: without
             # it a compressed-gradient restart re-quantizes from zero carry
@@ -567,6 +626,7 @@ class Trainer:
         self.opt_state = tree["opt_state"]
         if self.ef_state is not None:
             self.ef_state = tree["ef"]
+        self.rng = planops.load_key(tree["rng"])
         self._place()
         self.strategy.load_state_dict(
             {"arrays": tree["strategy"], "host": meta["strategy"]})

@@ -67,8 +67,8 @@ def test_infobatch_prunes_and_rescales():
     losses = np.linspace(0, 2, n)  # mean = 1.0
     s.observe(np.arange(n), jnp.asarray(losses, jnp.float32),
               jnp.ones(n, bool), jnp.ones(n, jnp.float32), 0)
-    idx = s.begin_epoch(1)
-    pruned = np.setdiff1d(np.arange(n), idx)
+    idx, pruned = s.begin_epoch(1)
+    np.testing.assert_array_equal(pruned, np.setdiff1d(np.arange(n), idx))
     assert len(pruned) > 0
     assert np.all(losses[pruned] < 1.0)          # only below-mean pruned
     # kept below-mean samples are rescaled 1/(1-r) = 2.0
@@ -78,8 +78,8 @@ def test_infobatch_prunes_and_rescales():
     above = np.array([i for i in idx if losses[i] >= 1.0])
     np.testing.assert_allclose(s.sample_weights(above), 1.0)
     # annealing: final epochs train on everything
-    idx9 = s.begin_epoch(9)
-    assert len(idx9) == n
+    idx9, pruned9 = s.begin_epoch(9)
+    assert len(idx9) == n and len(pruned9) == 0
 
 
 def test_infobatch_trainer_integration(tmp_path):

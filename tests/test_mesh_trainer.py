@@ -31,7 +31,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np
 import jax, jax.numpy as jnp
 
-from repro.core import KakurenboConfig, LRSchedule
+from repro.core import ForgetConfig, KakurenboConfig, LRSchedule
 from repro.data import SyntheticClassification
 from repro.models import cnn
 from repro.train import Trainer, TrainConfig
@@ -53,6 +53,7 @@ def make_trainer(mesh_shape, epochs=3, selection="histogram",
                          fraction_milestones=(0, 1, 2, 3))
     tc = TrainConfig(epochs=epochs, batch_size=64, strategy=strategy,
                      kakurenbo=kc, lr=LRSchedule(0.05, "cosine", epochs, 1),
+                     forget=ForgetConfig(fraction=0.3, warmup_epochs=2),
                      mesh_shape=mesh_shape, grad_chunks=8,
                      grad_compression=compression, fused_observe=fused,
                      seed=0, checkpoint_dir=checkpoint_dir,
@@ -214,13 +215,32 @@ print("MESH_OK")
 
 
 def test_mesh_other_strategies_smoke():
-    """Strategies that don't take a ParallelCtx (unsharded device state /
-    host-only plans) still train under the mesh via GSPMD resharding."""
+    """Every strategy trains under the mesh — PlanOps plans replicate their
+    score inputs inside the jitted plan step, so no strategy needs special
+    mesh wiring."""
     _run("""
 for strat in ("baseline", "infobatch", "sb"):
     recs, _ = run((8,), strategy=strat)
     losses = [r["loss"] for r in recs]
     assert losses[-1] < losses[0], (strat, losses)
+print("MESH_OK")
+""")
+
+
+@pytest.mark.parametrize("strategy", ["iswr", "infobatch", "forget", "sb"])
+def test_mesh_planops_strategies_size_invariant(strategy):
+    """(1,) vs (8,) meshes for the newly device-planned strategies: epoch
+    orders, per-epoch losses and final params bit-identical — the PlanOps
+    plan steps replicate their score inputs, so the plan math is the exact
+    single-device computation on every shard (and SB's in-step fused select
+    draws from a replicated history + key)."""
+    _run(f"""
+a = run((1,), strategy={strategy!r}, epochs=4)
+b = run((8,), strategy={strategy!r}, epochs=4)
+assert_bit_identical(a, b, {strategy!r})
+# device planning keeps the 1-host-sync/epoch contract under the mesh
+assert all(r["host_syncs"] == 1 for r in a[0]), a[0]
+assert all(r["host_syncs"] == 1 for r in b[0]), b[0]
 print("MESH_OK")
 """)
 

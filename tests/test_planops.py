@@ -1,0 +1,204 @@
+"""Unit tests for the shared device-plan library (``core/planops.py``) and
+the legacy-checkpoint RNG migration shims.
+
+The PlanOps ops are the building blocks every strategy's ``plan()`` now
+composes on device; these tests pin their semantics against the host-numpy
+logic they replaced (stable ranks, with-replacement draws, InfoBatch soft
+pruning, threshold masks) and the checkpoint/migration contract.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import planops
+from repro.core.strategy import rng_state
+
+
+# --------------------------------------------------------------------------
+# keys
+# --------------------------------------------------------------------------
+
+
+def test_strategy_key_convention():
+    """One seed, decorrelated per-strategy streams — and deterministic."""
+    k1 = planops.strategy_key(0, "baseline")
+    k2 = planops.strategy_key(0, "baseline")
+    np.testing.assert_array_equal(np.asarray(planops.key_data(k1)),
+                                  np.asarray(planops.key_data(k2)))
+    others = [planops.key_data(planops.strategy_key(0, n))
+              for n in ("iswr", "sb", "kakurenbo")]
+    for o in others:
+        assert not np.array_equal(np.asarray(planops.key_data(k1)),
+                                  np.asarray(o))
+    assert not np.array_equal(
+        np.asarray(planops.key_data(planops.strategy_key(1, "baseline"))),
+        np.asarray(planops.key_data(k1)))
+
+
+def test_key_data_roundtrip():
+    key = planops.strategy_key(7, "x")
+    restored = planops.load_key(np.asarray(planops.key_data(key)))
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.permutation(key, 16)),
+        np.asarray(jax.random.permutation(restored, 16)))
+
+
+def test_migrate_legacy_rng_deterministic():
+    """The same legacy numpy generator state always maps to the same key;
+    unrecognisable payloads fall back to the seed convention."""
+    st = rng_state(np.random.default_rng(42))
+    k1, k2 = (planops.migrate_legacy_rng(st, 0, "baseline") for _ in range(2))
+    np.testing.assert_array_equal(np.asarray(planops.key_data(k1)),
+                                  np.asarray(planops.key_data(k2)))
+    # survives the JSON round trip checkpoint metadata takes
+    st_json = json.loads(json.dumps(st))
+    k3 = planops.migrate_legacy_rng(st_json, 0, "baseline")
+    np.testing.assert_array_equal(np.asarray(planops.key_data(k1)),
+                                  np.asarray(planops.key_data(k3)))
+    fallback = planops.migrate_legacy_rng({"bogus": 1}, 3, "name")
+    np.testing.assert_array_equal(
+        np.asarray(planops.key_data(fallback)),
+        np.asarray(planops.key_data(planops.strategy_key(3, "name"))))
+
+
+def test_restore_key_both_formats():
+    key = planops.strategy_key(5, "s")
+    new = planops.restore_key(
+        {"arrays": {"rng_key": np.asarray(planops.key_data(key))},
+         "host": {}}, 5, "s")
+    np.testing.assert_array_equal(np.asarray(planops.key_data(new)),
+                                  np.asarray(planops.key_data(key)))
+    legacy = planops.restore_key(
+        {"arrays": {}, "host": {"rng": rng_state(np.random.default_rng(1))}},
+        5, "s")
+    assert legacy is not None
+    with pytest.raises(ValueError, match="cannot restore"):
+        planops.restore_key({"arrays": {}, "host": {}}, 5, "s")
+
+
+# --------------------------------------------------------------------------
+# ordering
+# --------------------------------------------------------------------------
+
+
+def test_device_permutation_is_permutation():
+    key = planops.strategy_key(0, "t")
+    p = np.asarray(planops.device_permutation(key, 257))
+    assert sorted(p.tolist()) == list(range(257))
+    p2 = np.asarray(planops.device_permutation(key, 257))
+    np.testing.assert_array_equal(p, p2)  # key-deterministic
+
+
+def test_masked_order_kept_first():
+    key = planops.strategy_key(1, "t")
+    mask = np.zeros(100, bool)
+    mask[::3] = True
+    order, num_masked = planops.masked_order(key, jnp.asarray(mask))
+    order, num_masked = np.asarray(order), int(num_masked)
+    assert num_masked == int(mask.sum())
+    assert sorted(order.tolist()) == list(range(100))
+    assert not mask[order[: 100 - num_masked]].any()
+    assert mask[order[100 - num_masked:]].all()
+
+
+def test_stable_rank_order_matches_numpy_stable():
+    r = np.random.default_rng(0)
+    scores = r.integers(0, 5, 200).astype(np.float32)  # heavy ties
+    rank = np.asarray(planops.stable_rank_order(jnp.asarray(scores)))
+    order = np.argsort(scores, kind="stable")
+    expect = np.zeros(200, np.int32)
+    expect[order] = np.arange(200)
+    np.testing.assert_array_equal(rank, expect)
+
+
+def test_topk_hide_stable_ties():
+    """FORGET's prune rule: k smallest, ties broken by lowest index — the
+    two earliest zeros win over the third."""
+    scores = jnp.asarray(np.array([1.0, 0.0, 0.0, 2.0, 0.0], np.float32))
+    mask = np.asarray(planops.topk_hide(scores, jnp.int32(2)))
+    np.testing.assert_array_equal(mask, [False, True, True, False, False])
+    mask3 = np.asarray(planops.topk_hide(scores, jnp.int32(3)))
+    np.testing.assert_array_equal(mask3, [False, True, True, False, True])
+
+
+# --------------------------------------------------------------------------
+# sampling
+# --------------------------------------------------------------------------
+
+
+def test_importance_probs_fill_and_normalise():
+    loss = jnp.asarray([2.0, 4.0, 100.0], jnp.float32)
+    valid = jnp.asarray([True, True, False])
+    p = np.asarray(planops.importance_probs(loss, valid, 0.0))
+    np.testing.assert_allclose(p.sum(), 1.0, rtol=1e-6)
+    # the unseen sample takes the mean seen loss (3.0), not its sentinel
+    np.testing.assert_allclose(p, np.array([2, 4, 3]) / 9.0, rtol=1e-5)
+    # nothing seen: uniform (fill 1.0 everywhere)
+    p0 = np.asarray(planops.importance_probs(
+        loss, jnp.zeros(3, bool), 0.0))
+    np.testing.assert_allclose(p0, 1 / 3, rtol=1e-6)
+
+
+def test_with_replacement_tracks_probabilities():
+    n = 4000
+    p = np.full(n, 0.5 / (n - 100))
+    p[:100] = 0.5 / 100  # 100 hot samples carry half the mass
+    key = planops.strategy_key(0, "draw")
+    idx = np.asarray(planops.with_replacement(key, jnp.asarray(p, jnp.float32)))
+    assert idx.shape == (n,) and idx.min() >= 0 and idx.max() < n
+    hot = np.mean(idx < 100)
+    assert 0.4 < hot < 0.6  # ~half the draws hit the hot set
+    idx2 = np.asarray(planops.with_replacement(key, jnp.asarray(p, jnp.float32)))
+    np.testing.assert_array_equal(idx, idx2)
+
+
+def test_weighted_keep_infobatch_semantics():
+    r = np.random.default_rng(0)
+    loss = r.exponential(1.0, 512).astype(np.float32)
+    valid = np.ones(512, bool)
+    valid[::7] = False
+    key = planops.strategy_key(0, "ib")
+    prune, w = planops.weighted_keep(key, jnp.asarray(loss),
+                                     jnp.asarray(valid), 0.5)
+    prune, w = np.asarray(prune), np.asarray(w)
+    mean = loss[valid].mean()
+    below = valid & (loss < mean)
+    assert prune[~below].sum() == 0          # only below-mean pruned
+    assert 0 < prune.sum() < below.sum()     # soft, not total
+    np.testing.assert_allclose(w[below & ~prune], 2.0, rtol=1e-6)
+    np.testing.assert_allclose(w[~below], 1.0)
+    # cold start: nothing valid -> no prune, uniform weights
+    prune0, w0 = planops.weighted_keep(key, jnp.asarray(loss),
+                                       jnp.zeros(512, bool), 0.5)
+    assert int(np.asarray(prune0).sum()) == 0
+    np.testing.assert_allclose(np.asarray(w0), 1.0)
+
+
+# --------------------------------------------------------------------------
+# threshold selection
+# --------------------------------------------------------------------------
+
+
+def test_threshold_mask_methods_agree_on_separated_losses():
+    """Sort and histogram paths hide the same well-separated low-loss set;
+    the Pallas-kernel histogram is bit-identical to the jnp histogram."""
+    n = 1024
+    r = np.random.default_rng(0)
+    loss = np.concatenate([r.uniform(0, 0.1, 300),
+                           r.uniform(10, 11, n - 300)]).astype(np.float32)
+    perm = r.permutation(n)
+    loss = loss[perm]
+    valid = jnp.ones(n, bool)
+    masks = {m: np.asarray(planops.threshold_mask(
+        jnp.asarray(loss), valid, 300 / n, method=m))
+        for m in ("sort", "histogram", "histogram_pallas")}
+    np.testing.assert_array_equal(masks["histogram"],
+                                  masks["histogram_pallas"])
+    for m, mask in masks.items():
+        assert mask.sum() == 300, m
+        assert loss[mask].max() < loss[~mask].min(), m

@@ -11,12 +11,16 @@ identical to the host-loop engine, for every strategy that opts in
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import KakurenboConfig, LRSchedule
+from repro.core import (
+    ForgetConfig, KakurenboConfig, LRSchedule, available_strategies,
+)
 from repro.data import SyntheticClassification
 from repro.data.pipeline import Pipeline, epoch_index_plan
 from repro.models import cnn
@@ -24,6 +28,10 @@ from repro.train import Trainer, TrainConfig
 from repro.train.engines import HostLoopEngine, ScanEpochEngine
 
 CFG_MODEL = cnn.CNNConfig(image_size=8, widths=(8,), hidden=16)
+
+#: The whole registry must run scanned — the PlanOps acceptance bar.
+ALL_STRATEGIES = ("baseline", "forget", "gradmatch", "infobatch", "iswr",
+                  "kakurenbo", "random", "sb")
 
 
 def _fns():
@@ -50,6 +58,8 @@ def _mk(engine, strategy="kakurenbo", epochs=3, num_samples=256, seed=0,
         lr=LRSchedule(0.05, "cosine", epochs, 1),
         kakurenbo=KakurenboConfig(max_fraction=0.3,
                                   fraction_milestones=(0, 1, 2, 3)),
+        # warmup inside the run so FORGET's prune+restart is exercised
+        forget=ForgetConfig(fraction=0.3, warmup_epochs=2),
         seed=seed, checkpoint_dir=checkpoint_dir,
         checkpoint_every=1 if checkpoint_dir else 0, **tc_kw)
     return Trainer(tc, init_params, loss_fn, ds, None)
@@ -82,6 +92,8 @@ def _assert_same_trajectory(tr_a, tr_b, hist_a, hist_b, plans_a, plans_b,
     state_b = tr_b.strategy.get_device_state()
     if state_a is not None:
         for a, b in zip(jax.tree.leaves(state_a), jax.tree.leaves(state_b)):
+            if jnp.issubdtype(a.dtype, jax.dtypes.prng_key):
+                a, b = jax.random.key_data(a), jax.random.key_data(b)
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                           err_msg=tag)
 
@@ -112,12 +124,21 @@ def test_epoch_index_plan_short_epoch_is_empty():
 # --------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("strategy",
-                         ["kakurenbo", "baseline", "iswr", "infobatch"])
+def test_registry_is_fully_scan_capable():
+    """The PlanOps acceptance bar: every registered strategy reports
+    supports_scan and the parity suite below covers the whole registry."""
+    assert tuple(available_strategies()) == ALL_STRATEGIES
+    from repro.core import make_strategy
+    for name in ALL_STRATEGIES:
+        s = make_strategy(name, 64, seed=0, num_classes=4, total_epochs=4)
+        assert s.supports_scan, name
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
 def test_scan_engine_bit_identical_to_host_loop(strategy):
     """Same losses, params, SampleState, hidden/move-back sets and work
-    accounting from both engines — and O(1) host syncs from the scanned
-    epoch (the plan materialisation only)."""
+    accounting from both engines, for the FULL strategy registry — and O(1)
+    host syncs from the scanned epoch (the plan materialisation only)."""
     tr_s = _mk("scan", strategy)
     tr_h = _mk("host", strategy)
     assert isinstance(tr_s.engine, ScanEpochEngine)
@@ -127,7 +148,7 @@ def test_scan_engine_bit_identical_to_host_loop(strategy):
     _assert_same_trajectory(tr_s, tr_h, hist_s, hist_h, plans_s, plans_h,
                             strategy)
     assert all(h.engine == "scan" for h in hist_s)
-    # fused-observe scanned epochs: host_syncs == the per-epoch plan cost,
+    # device-planned scanned epochs: host_syncs == the per-epoch plan cost,
     # never O(batches)
     assert all(h.host_syncs <= 1 for h in hist_s)
 
@@ -161,14 +182,45 @@ def test_legacy_fused_off_still_forces_host_loop():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-def test_needs_batch_loss_strategy_keeps_host_loop():
-    """Selective-Backprop's forward-then-select flow cannot scan: auto picks
-    the host loop, forcing engine='scan' is a config error."""
-    tr = _mk("auto", "sb", epochs=1)
+def test_sb_scans_with_fused_select():
+    """Selective-Backprop's forward-then-mask flow is the in-step
+    fused_select hook: auto picks the scanned engine, the backward count
+    reflects the surviving subset, and the select state advances."""
+    tr = _mk("auto", "sb", epochs=2)
+    assert isinstance(tr.engine, ScanEpochEngine)
+    hist = tr.run()
+    # after the bootstrap window the Bernoulli mask drops samples, so the
+    # backward count falls below the forward count
+    assert hist[-1].bwd_samples < hist[-1].fwd_samples
+    assert hist[-1].bwd_samples > 0
+    assert int(tr.strategy.get_device_state()["count"]) > 0
+
+
+def test_host_observing_strategy_keeps_host_loop():
+    """Engine selection stays capability-driven: an external strategy with a
+    host-side observe() and no fused_observe cannot scan — auto picks the
+    host loop and forcing engine='scan' is a config error."""
+    from repro.core.strategy import EpochPlan, SampleStrategy
+
+    class HostObserver(SampleStrategy):
+        def plan(self, epoch):
+            return EpochPlan(epoch=epoch,
+                             visible_indices=np.arange(self.num_samples))
+
+        def observe(self, indices, loss, pa, pc, epoch):
+            self.seen = np.asarray(indices)
+
+    ds = SyntheticClassification(num_samples=128, image_size=8, seed=0)
+    init_params, loss_fn = _fns()
+    tc = TrainConfig(epochs=1, batch_size=64, engine="auto",
+                     lr=LRSchedule(0.05, "cosine", 1, 1), seed=0)
+    tr = Trainer(tc, init_params, loss_fn, ds, None,
+                 strategy=HostObserver(ds.num_samples))
     assert isinstance(tr.engine, HostLoopEngine)
     tr.run()
     with pytest.raises(ValueError, match="scan"):
-        _mk("scan", "sb")
+        Trainer(dataclasses.replace(tc, engine="scan"), init_params, loss_fn,
+                ds, None, strategy=HostObserver(ds.num_samples))
 
 
 def test_engine_config_validation():
@@ -217,14 +269,16 @@ def test_scan_engine_with_grad_compression():
 # --------------------------------------------------------------------------
 
 
-def test_scan_mid_epoch_crash_checkpoint_restart(tmp_path):
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_scan_mid_epoch_crash_checkpoint_restart(strategy, tmp_path):
     """A crash *between scan blocks* mid-epoch leaves live (non-donated)
     buffers — state_dict works for checkpoint-on-fault — and restarting from
-    the last epoch-boundary checkpoint replays the exact trajectory."""
-    ref = _mk("scan", epochs=4, scan_steps=1)
+    the last epoch-boundary checkpoint replays the exact trajectory, for
+    every (newly) device-planned strategy in the registry."""
+    ref = _mk("scan", strategy, epochs=4, scan_steps=1)
     hist_ref = ref.run()
 
-    tr = _mk("scan", epochs=4, scan_steps=1,
+    tr = _mk("scan", strategy, epochs=4, scan_steps=1,
              checkpoint_dir=str(tmp_path / "ckpt"))
     tr.run(2)  # checkpoints after every epoch
     # crash inside epoch 2 after the first scan block
@@ -245,7 +299,7 @@ def test_scan_mid_epoch_crash_checkpoint_restart(tmp_path):
     sd = tr.strategy.state_dict()
     jax.block_until_ready(jax.tree.leaves(sd["arrays"]))
 
-    tr2 = _mk("scan", epochs=4, scan_steps=1,
+    tr2 = _mk("scan", strategy, epochs=4, scan_steps=1,
               checkpoint_dir=str(tmp_path / "ckpt"), seed=99)
     assert tr2.restore_latest()
     assert tr2.epoch == 2

@@ -33,13 +33,16 @@ def _observe_epoch(s, rng, epoch):
         loss = jnp.asarray(rng.exponential(1.0, BATCH), jnp.float32)
         pa = jnp.asarray(rng.random(BATCH) < 0.7)
         pc = jnp.asarray(rng.random(BATCH), jnp.float32)
-        if s.needs_batch_loss:
-            w = s.select_batch(idx, np.asarray(loss))
-            assert w is not None and len(w) == len(idx)
-            assert np.all(np.asarray(w) >= 0)
-        else:
-            w = s.batch_weights(idx)
-            assert w is None or len(w) == len(idx)
+        w = s.batch_weights(idx)
+        assert w is None or len(w) == len(idx)
+        if s.fused_select is not None:
+            # In-step selection: weights are non-negative, survivors keep
+            # the batch-mean loss unbiased, and the device state advances.
+            state = s.get_device_state()
+            w_sel, state = s.fused_select(state, loss)
+            assert len(w_sel) == len(idx)
+            assert np.all(np.asarray(w_sel) >= 0)
+            s.set_device_state(state)
         s.observe(idx, loss, pa, pc, epoch)
     if plan.needs_refresh:
         def eval_forward(idx):
@@ -104,3 +107,55 @@ def test_strategy_state_roundtrip_bit_exact(name):
     np.testing.assert_array_equal(np.asarray(p_ref.hidden_indices),
                                   np.asarray(p_clone.hidden_indices))
     assert p_ref.lr_scale == p_clone.lr_scale
+
+
+def test_all_strategies_support_scan():
+    """The PlanOps bar: every registered strategy plans on device and can
+    run its epochs under the scanned engine."""
+    for name in sorted(EXPECTED):
+        assert _make(name).supports_scan, name
+
+
+# --------------------------------------------------------------------------
+# legacy (pre-PlanOps) checkpoint migration
+# --------------------------------------------------------------------------
+
+def _legacy_state_dict(name, s):
+    """The state_dict shape the pre-PlanOps strategies checkpointed: host
+    numpy Generator states instead of device rng_key leaves."""
+    from repro.core.strategy import rng_state
+    rng = rng_state(np.random.default_rng(7))
+    arrays = {}
+    host = {"rng": rng}
+    if name in ("iswr", "infobatch"):
+        arrays["state"] = s._inner.state
+    elif name == "forget":
+        arrays["state"] = s._inner.state
+        arrays["pruned"] = np.zeros(N, bool)
+        host["restarted"] = False
+    elif name == "gradmatch":
+        arrays["subset"] = np.arange(N)
+        arrays["weights"] = np.ones(N, np.float32)
+    elif name == "sb":
+        arrays["hist"] = np.linspace(0.1, 1.0, 50).astype(np.float32)
+        host["inner_rng"] = rng_state(np.random.default_rng(8))
+    elif name == "random":
+        arrays["state"] = s._inner.state
+        arrays["inner_key"] = np.asarray(s._inner.key_data())
+    return {"arrays": arrays, "host": json.loads(json.dumps(host))}
+
+
+@pytest.mark.parametrize(
+    "name", sorted(EXPECTED - {"kakurenbo"}))  # kakurenbo was always keyed
+def test_legacy_state_dict_still_restores(name):
+    """Pre-PlanOps checkpoints (host numpy RNG states) still restore: the
+    migration shim derives the device key deterministically, so two restores
+    of the same legacy payload continue on identical plans."""
+    clones = []
+    for seed in (11, 22):  # construction seed must not leak through
+        s = _make(name, seed=seed)
+        s.load_state_dict(_legacy_state_dict(name, _make(name)))
+        clones.append(s)
+    p1, p2 = (c.plan(0) for c in clones)
+    np.testing.assert_array_equal(np.asarray(p1.visible_indices),
+                                  np.asarray(p2.visible_indices))

@@ -119,25 +119,18 @@ def test_resume_preserves_epoch_permutation(tmp_path):
                                   np.asarray(tr_res.sampler.state.hidden))
 
 
-def test_select_batch_none_counts_full_batch(tmp_path):
-    """Regression: a needs_batch_loss strategy whose select_batch returns
-    None (documented as "uniform") must count the whole batch as backward
-    work — np.count_nonzero(None) == 0 used to zero out bwd_samples."""
-    from repro.core.strategy import EpochPlan, SampleStrategy
-
-    class UniformSB(SampleStrategy):
-        needs_batch_loss = True
-
-        def plan(self, epoch):
-            return EpochPlan(epoch=epoch,
-                             visible_indices=np.arange(self.num_samples))
-        # select_batch inherits the base None-returning implementation
-
+def test_backward_work_accounting(tmp_path):
+    """The step reports its own backward count as a device scalar: full
+    batches for plain strategies, the fused select's surviving subset for
+    SB — and the paper's work accounting must never silently zero out."""
     ds = SyntheticClassification(num_samples=256, image_size=8, seed=0)
-    tr = _mk_trainer(tmp_path, ds=ds, epochs=1,
-                     strategy_obj=UniformSB(ds.num_samples))
-    stats = tr.run_epoch(0)
+    stats = _mk_trainer(tmp_path / "base", strategy="baseline", ds=ds,
+                        epochs=1).run_epoch(0)
     assert stats.bwd_samples == stats.fwd_samples == 256
+    stats_sb = _mk_trainer(tmp_path / "sb", strategy="sb", ds=ds,
+                           epochs=1).run_epoch(0)
+    # bootstrap trains the first batch fully; later batches drop samples
+    assert 0 < stats_sb.bwd_samples < stats_sb.fwd_samples == 256
 
 
 def test_checkpoint_integrity_detects_corruption(tmp_path):
