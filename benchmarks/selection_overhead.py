@@ -120,10 +120,13 @@ def _epoch_sync_counts(n: int = 4096, batch: int = 256,
 
 
 def strategy_sync_counts(num_samples: int = 512, batch: int = 64,
-                         epochs: int = 2) -> list[dict]:
+                         epochs: int = 2,
+                         guard_policy: str = "skip_update") -> list[dict]:
     """One tiny training run per registered strategy: every strategy must
     auto-select the scanned engine and keep plan+loop host syncs at
-    1/epoch — the PlanOps acceptance bar."""
+    1/epoch — the PlanOps acceptance bar.  Runs with the numeric guard ON
+    by default: its counters ride the device carry and the epoch-end fetch,
+    so guarding must not add a single host sync."""
     import jax.numpy as jnp
 
     from repro.core import (
@@ -151,13 +154,14 @@ def strategy_sync_counts(num_samples: int = 512, batch: int = 64,
             kakurenbo=KakurenboConfig(selection="histogram", max_fraction=0.3,
                                       fraction_milestones=(0, 1, 2, 3)),
             forget=ForgetConfig(fraction=0.3, warmup_epochs=1),
-            lr=LRSchedule(0.05, "cosine", epochs, 1), seed=0)
+            lr=LRSchedule(0.05, "cosine", epochs, 1), seed=0,
+            guard_policy=guard_policy)
         tr = Trainer(tc, lambda r: cnn.init(r, model_cfg), loss_fn, ds, None)
         hist = tr.run()
         syncs = max(h.host_syncs for h in hist)
         rec = {"bench": "strategy_host_syncs", "strategy": name,
                "engine": hist[-1].engine, "host_syncs_per_epoch": syncs,
-               "epochs": epochs}
+               "guard_policy": guard_policy, "epochs": epochs}
         assert rec["engine"] == "scan", rec
         assert syncs <= 1, rec
         records.append(rec)

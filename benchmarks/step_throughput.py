@@ -65,7 +65,8 @@ def _fns():
 
 def build_trainer(engine: str, hidden_fraction: float, *, num_samples: int,
                   batch_size: int, epochs: int, scan_steps: int,
-                  strategy: str | None = None) -> Trainer:
+                  strategy: str | None = None,
+                  guard_policy: str = "off") -> Trainer:
     # Without an explicit strategy: fraction 0 -> the baseline strategy
     # (nothing to hide, pure engine overhead comparison); otherwise
     # KAKURENBO at F_e = hidden_fraction with the O(N) histogram plan.
@@ -81,7 +82,8 @@ def build_trainer(engine: str, hidden_fraction: float, *, num_samples: int,
         engine=engine, scan_steps=scan_steps, kakurenbo=kc,
         forget=ForgetConfig(fraction=0.3,
                             warmup_epochs=max(epochs // 2, 1)),
-        lr=LRSchedule(0.05, "cosine", epochs, 1), seed=0)
+        lr=LRSchedule(0.05, "cosine", epochs, 1), seed=0,
+        guard_policy=guard_policy)
     ds = SyntheticClassification(num_samples=num_samples, seed=0)
     init_params, loss_fn = _fns()
     return Trainer(tc, init_params, loss_fn, ds, None)
@@ -90,7 +92,8 @@ def build_trainer(engine: str, hidden_fraction: float, *, num_samples: int,
 def bench_engine(engine: str, hidden_fraction: float, *,
                  num_samples: int = 4096, batch_size: int = 128,
                  epochs: int = 8, scan_steps: int = 8,
-                 strategy: str | None = None) -> dict:
+                 strategy: str | None = None,
+                 guard_policy: str = "off") -> dict:
     """Train ``epochs`` epochs; report the *median* per-epoch batch-loop
     throughput over every epoch after the first.
 
@@ -102,7 +105,8 @@ def bench_engine(engine: str, hidden_fraction: float, *,
     """
     tr = build_trainer(engine, hidden_fraction, num_samples=num_samples,
                        batch_size=batch_size, epochs=epochs,
-                       scan_steps=scan_steps, strategy=strategy)
+                       scan_steps=scan_steps, strategy=strategy,
+                       guard_policy=guard_policy)
     if hasattr(tr.engine, "warmup"):
         tr.engine.warmup()   # compile all block shapes before the clock
     rates = []
@@ -130,6 +134,7 @@ def bench_engine(engine: str, hidden_fraction: float, *,
         "batch_size": batch_size,
         "num_samples": num_samples,
         "scan_steps": scan_steps if tr.engine.name == "scan" else None,
+        "guard_policy": guard_policy,
         "steps_per_s": round(steps_per_s, 2),
         "samples_per_s": round(steps_per_s * batch_size, 1),
         "min_steps_per_s": round(float(np.min(rates)), 2),
@@ -199,6 +204,42 @@ def strategies_main(out: str | None) -> None:
     _write(records, out)
 
 
+def guard_main(out: str | None, max_overhead_pct: float = 3.0) -> None:
+    """Numeric-guard overhead: the same scanned kakurenbo run with
+    ``guard_policy`` off vs ``skip_update``.
+
+    The guard's in-step work is a handful of ``isfinite`` reductions and
+    pytree selects per step — O(params) elementwise next to the conv
+    grads — and its counters ride the epoch-end fetch, so the contract is
+    *under ``max_overhead_pct`` percent* steady-state overhead at the
+    reference batch size (asserted here, recorded in the BENCH file).
+    """
+    records = []
+    cells = {}
+    for policy in ("off", "skip_update"):
+        rec = bench_engine("scan", 0.3, guard_policy=policy)
+        cells[policy] = rec
+        records.append(rec)
+        print("BENCH " + json.dumps(rec))
+    overhead_pct = round(
+        100.0 * (cells["off"]["steps_per_s"]
+                 / cells["skip_update"]["steps_per_s"] - 1.0), 2)
+    rec = {
+        "bench": "guard_overhead",
+        "strategy": cells["off"]["strategy"],
+        "engine": "scan",
+        "batch_size": cells["off"]["batch_size"],
+        "steps_per_s_off": cells["off"]["steps_per_s"],
+        "steps_per_s_guarded": cells["skip_update"]["steps_per_s"],
+        "overhead_pct": overhead_pct,
+        "max_overhead_pct": max_overhead_pct,
+    }
+    records.append(rec)
+    print("BENCH " + json.dumps(rec))
+    assert overhead_pct < max_overhead_pct, rec
+    _write(records, out)
+
+
 def smoke() -> None:
     """CI contract check (timing-free): the scanned engine engages — for
     every registered strategy — emits BENCH records, and device-planned
@@ -238,12 +279,17 @@ if __name__ == "__main__":
                     help="'all' benches every registered strategy "
                          "(scan vs host) instead of the hidden-fraction "
                          "sweep")
+    ap.add_argument("--guard", action="store_true",
+                    help="bench guard_policy off vs skip_update and assert "
+                         "the guard's steady-state overhead stays under 3%%")
     ap.add_argument("--out", default=None,
                     help="append BENCH records to this JSON file "
                          "(e.g. results/BENCH_steps.json)")
     args = ap.parse_args()
     if args.smoke:
         smoke()
+    elif args.guard:
+        guard_main(args.out)
     elif args.strategies == "all":
         strategies_main(args.out)
     else:

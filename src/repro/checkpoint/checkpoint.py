@@ -6,18 +6,38 @@ Layout: ``<dir>/step_<n>/`` containing one ``.npy`` per pytree leaf plus a
 yields a checkpoint that ``latest_step`` would pick up (write-ahead commit).
 In a multi-host deployment each host writes its own param shards under
 ``host_<k>`` with the same protocol; here (single process) there is one host.
+
+Resilience on top of the commit protocol (``docs/fault_tolerance.md``):
+
+- ``save`` retries transient I/O errors with exponential backoff (the tmp
+  dir is cleaned between attempts, so a retry restarts the write-ahead
+  protocol from scratch and the atomicity guarantee holds).
+- ``save_async`` returns an :class:`AsyncSaveHandle` whose ``join()`` /
+  ``result()`` re-raise the worker thread's failure — a failed background
+  save can no longer masquerade as success (the Trainer joins the handle
+  before GC'ing older checkpoints).
+- ``restore_latest`` walks the committed chain newest-first: a checkpoint
+  that fails its CRC / has an unreadable leaf or manifest is *quarantined*
+  (renamed ``corrupt_<name>``, so ``latest_step`` and ``_gc`` never touch
+  it again) with a logged warning, and the restore falls back to the next
+  committed step.  A structure mismatch (a valid checkpoint from a
+  different config) falls back without quarantining.
 """
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 import threading
+import time
 import zlib
 from typing import Any
 
 import jax
 import numpy as np
+
+logger = logging.getLogger("repro.checkpoint")
 
 
 def _flatten(tree: Any):
@@ -25,29 +45,33 @@ def _flatten(tree: Any):
     return leaves, treedef
 
 
-def save(directory: str, step: int, tree: Any, metadata: dict | None = None,
-         keep: int = 3) -> str:
-    """Atomically save ``tree`` for ``step``. Returns the checkpoint path."""
-    os.makedirs(directory, exist_ok=True)
-    final = os.path.join(directory, f"step_{step:010d}")
-    tmp = final + ".tmp"
+def _write_leaf(path: str, arr: np.ndarray) -> None:
+    """Single-leaf write, the unit of save I/O.
+
+    The indirection is the fault-injection seam: ``train/chaos.py``
+    patches this to simulate failing disks (``failing_leaf_writes``).
+    """
+    np.save(path, arr)
+
+
+def _write_dir(tmp: str, final: str, step: int, arrays: list[np.ndarray],
+               treedef, metadata: dict | None) -> None:
+    """One attempt of the write-ahead commit protocol into ``tmp``."""
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    leaves, treedef = _flatten(tree)
     manifest = {
         "step": step,
         "treedef": str(treedef),
-        "num_leaves": len(leaves),
+        "num_leaves": len(arrays),
         "metadata": metadata or {},
         "crc": [],
         "dtype": [],
     }
-    for i, leaf in enumerate(leaves):
-        arr = np.asarray(jax.device_get(leaf))
+    for i, arr in enumerate(arrays):
         manifest["crc"].append(zlib.crc32(np.ascontiguousarray(arr).tobytes()))
         manifest["dtype"].append(str(arr.dtype))
-        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
+        _write_leaf(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
@@ -59,19 +83,108 @@ def save(directory: str, step: int, tree: Any, metadata: dict | None = None,
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
-    _gc(directory, keep)
+
+
+def save(directory: str, step: int, tree: Any, metadata: dict | None = None,
+         keep: int | None = 3, retries: int = 2,
+         retry_backoff: float = 0.05, _sleep=time.sleep) -> str:
+    """Atomically save ``tree`` for ``step``. Returns the checkpoint path.
+
+    Transient ``OSError`` during the write is retried up to ``retries``
+    times with exponential backoff (``retry_backoff * 2**attempt`` seconds);
+    each attempt restarts the write-ahead protocol in a clean tmp dir, so a
+    partially-written attempt can never be committed.  ``keep=None``
+    disables the trailing GC (the Trainer's async mode GCs explicitly,
+    after the save is confirmed).
+    """
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    leaves, treedef = _flatten(tree)
+    # Device -> host once, outside the retry loop.
+    arrays = [np.asarray(jax.device_get(leaf)) for leaf in leaves]
+    last_exc: OSError | None = None
+    for attempt in range(retries + 1):
+        try:
+            _write_dir(tmp, final, step, arrays, treedef, metadata)
+            break
+        except OSError as e:
+            last_exc = e
+            shutil.rmtree(tmp, ignore_errors=True)
+            if attempt < retries:
+                delay = retry_backoff * (2 ** attempt)
+                logger.warning(
+                    "checkpoint save step %d attempt %d/%d failed (%s) — "
+                    "retrying in %.2fs", step, attempt + 1, retries + 1, e,
+                    delay)
+                _sleep(delay)
+    else:
+        logger.error("checkpoint save step %d failed after %d attempts: %s",
+                     step, retries + 1, last_exc)
+        raise last_exc
+    if keep:
+        _gc(directory, keep)
     return final
 
 
+class AsyncSaveHandle:
+    """Handle for a background checkpoint save.
+
+    ``join()`` waits for the worker and *re-raises* its failure — a failed
+    async save is no longer silent.  ``result()`` additionally returns the
+    committed path.  Thread-API compatible (``join``/``is_alive``) with the
+    bare ``threading.Thread`` this used to return.
+    """
+
+    def __init__(self, path: str, target, args):
+        self.path = path
+        self._exc: BaseException | None = None
+        self._result: str | None = None
+
+        def _run():
+            try:
+                self._result = target(*args)
+            except BaseException as e:  # noqa: BLE001 — re-raised in join()
+                self._exc = e
+
+        self._thread = threading.Thread(target=_run)
+        self._thread.start()
+
+    def is_alive(self) -> bool:
+        return self._thread.is_alive()
+
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+    def exception(self) -> BaseException | None:
+        """Wait and return (not raise) the worker's exception, if any."""
+        self._thread.join()
+        return self._exc
+
+    def join(self, timeout: float | None = None) -> None:
+        self._thread.join(timeout)
+        if self._exc is not None:
+            raise self._exc
+
+    def result(self, timeout: float | None = None) -> str:
+        self.join(timeout)
+        return self._result
+
+
 def save_async(directory: str, step: int, tree: Any,
-               metadata: dict | None = None, keep: int = 3) -> threading.Thread:
+               metadata: dict | None = None,
+               keep: int | None = 3) -> AsyncSaveHandle:
     """Snapshot to host memory synchronously, write to disk in a thread —
-    training continues while I/O happens (the standard async-ckpt split)."""
+    training continues while I/O happens (the standard async-ckpt split).
+
+    Returns an :class:`AsyncSaveHandle`; call ``join()``/``result()`` to
+    surface save failures (the old API returned a bare ``Thread`` that
+    swallowed them).
+    """
     snapshot = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
-    t = threading.Thread(
-        target=save, args=(directory, step, snapshot, metadata, keep))
-    t.start()
-    return t
+    path = os.path.join(directory, f"step_{step:010d}")
+    return AsyncSaveHandle(path, save,
+                           (directory, step, snapshot, metadata, keep))
 
 
 def _valid(path: str) -> bool:
@@ -80,24 +193,37 @@ def _valid(path: str) -> bool:
             and os.path.exists(os.path.join(path, "manifest.json")))
 
 
-def latest_step(directory: str) -> int | None:
+def _committed_steps(directory: str) -> list[int]:
     if not os.path.isdir(directory):
-        return None
+        return []
     steps = []
     for name in os.listdir(directory):
         if name.startswith("step_") and _valid(os.path.join(directory, name)):
             steps.append(int(name.split("_")[1]))
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = _committed_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore(directory: str, step: int, like: Any,
             check_integrity: bool = True) -> tuple[Any, dict]:
-    """Restore into the structure of ``like``. Returns (tree, metadata)."""
+    """Restore into the structure of ``like``. Returns (tree, metadata).
+
+    Raises ``FileNotFoundError`` (no committed dir), ``ValueError``
+    (structure mismatch vs ``like``), or ``IOError`` (CRC mismatch or an
+    unreadable/corrupt leaf or manifest).
+    """
     path = os.path.join(directory, f"step_{step:010d}")
     if not _valid(path):
         raise FileNotFoundError(f"no committed checkpoint at {path}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except json.JSONDecodeError as e:
+        raise IOError(f"corrupt manifest in {path}: {e}") from e
     leaves, treedef = _flatten(like)
     if manifest["num_leaves"] != len(leaves):
         raise ValueError(
@@ -105,7 +231,12 @@ def restore(directory: str, step: int, like: Any,
             f"{len(leaves)} — structure mismatch")
     out = []
     for i, ref in enumerate(leaves):
-        arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+        leaf_path = os.path.join(path, f"leaf_{i:05d}.npy")
+        try:
+            arr = np.load(leaf_path)
+        except (ValueError, EOFError, OSError) as e:
+            # Truncated/garbled .npy — integrity, not structure.
+            raise IOError(f"unreadable leaf {i} of {path}: {e}") from e
         if check_integrity:
             crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
             if crc != manifest["crc"][i]:
@@ -114,12 +245,75 @@ def restore(directory: str, step: int, like: Any,
     return jax.tree.unflatten(treedef, out), manifest["metadata"]
 
 
-def restore_latest(directory: str, like: Any) -> tuple[Any, dict, int] | None:
-    step = latest_step(directory)
-    if step is None:
+def _quarantine(directory: str, step: int) -> str | None:
+    """Rename a corrupt ``step_<n>`` dir to ``corrupt_<...>``.
+
+    The prefix swap takes it out of ``latest_step``'s and ``_gc``'s view
+    (both filter on ``step_``) while preserving the bytes for forensics.
+    """
+    name = f"step_{step:010d}"
+    src = os.path.join(directory, name)
+    dst = os.path.join(directory, f"corrupt_{name}")
+    n = 0
+    while os.path.exists(dst):
+        n += 1
+        dst = os.path.join(directory, f"corrupt_{name}.{n}")
+    try:
+        os.rename(src, dst)
+    except OSError as e:  # pragma: no cover — quarantine is best-effort
+        logger.warning("could not quarantine %s: %s", src, e)
         return None
-    tree, meta = restore(directory, step, like)
-    return tree, meta, step
+    return dst
+
+
+def restore_latest(directory: str, like: Any,
+                   fallback: bool = True) -> tuple[Any, dict, int] | None:
+    """Restore the newest *good* committed checkpoint.
+
+    Walks the committed chain newest-first: integrity failures (CRC
+    mismatch, unreadable leaf/manifest) quarantine the dir — renamed
+    ``corrupt_<name>`` with a logged warning — and fall back to the next
+    committed step; structure mismatches fall back without quarantining
+    (the checkpoint is fine, the config changed).  Returns ``None`` with no
+    committed checkpoint at all; re-raises the *newest* checkpoint's error
+    when every candidate fails (so single-checkpoint behaviour is unchanged
+    from the pre-fallback API).  ``fallback=False`` restores only the
+    newest committed step, failures propagating directly.
+    """
+    first_exc: Exception | None = None
+    for step in reversed(_committed_steps(directory)):
+        try:
+            tree, meta = restore(directory, step, like)
+            return tree, meta, step
+        except IOError as e:
+            if not fallback:
+                raise
+            first_exc = first_exc or e
+            dst = _quarantine(directory, step)
+            logger.warning(
+                "corrupt checkpoint step %d (%s)%s — falling back to the "
+                "previous committed step", step, e,
+                f"; quarantined to {dst}" if dst else "")
+        except ValueError as e:
+            if not fallback:
+                raise
+            first_exc = first_exc or e
+            logger.warning(
+                "checkpoint step %d structure mismatch (%s) — falling back "
+                "to the previous committed step", step, e)
+    if first_exc is not None:
+        raise first_exc
+    return None
+
+
+def gc(directory: str, keep: int = 3) -> None:
+    """Drop all but the newest ``keep`` committed checkpoints.
+
+    Public so the Trainer's async mode can defer GC until a newer save's
+    handle has been joined successfully (never delete the fallback chain
+    before its replacement is confirmed on disk).
+    """
+    _gc(directory, keep)
 
 
 def _gc(directory: str, keep: int) -> None:

@@ -196,8 +196,14 @@ def importance_probs(loss: jax.Array, valid: jax.Array, smoothing: float,
 
     Never-seen samples take the mean seen loss (neutral importance, 1.0 when
     nothing is seen yet); ``smoothing`` keeps zero-loss samples drawable.
+
+    Defense in depth against numeric faults (train/guard.py keeps them out
+    of ``SampleState`` upstream): a non-finite loss is treated as not valid
+    — it takes the neutral fill instead of poisoning the mean/CDF.  Free
+    when everything is finite (the mask is unchanged bit for bit).
     """
     loss, valid = _rep(loss, mesh), _rep(valid, mesh)
+    valid = valid & jnp.isfinite(loss)
     cnt = jnp.sum(valid)
     fill = jnp.where(
         cnt > 0,
@@ -229,9 +235,11 @@ def weighted_keep(key: jax.Array, loss: jax.Array, valid: jax.Array,
     Randomly prunes fraction ``prune_ratio`` of the *below-mean* valid
     samples and up-weights every kept below-mean sample by ``1/(1-r)`` so
     the expected gradient is unbiased.  With nothing valid the mask is empty
-    and the weights are uniform.
+    and the weights are uniform.  Non-finite losses are treated as not
+    valid (never pruned, weight 1.0) so they cannot poison the mean.
     """
     loss, valid = _rep(loss, mesh), _rep(valid, mesh)
+    valid = valid & jnp.isfinite(loss)
     cnt = jnp.sum(valid)
     mean = jnp.sum(jnp.where(valid, loss, 0.0)) / jnp.maximum(cnt, 1)
     below = valid & (loss < mean)
@@ -274,7 +282,10 @@ def sort_high_mask(loss: jax.Array, valid: jax.Array,
 
     Invalid samples must not occupy the top-rank window (their sentinel
     losses sort above every real loss), so they rank below everything.
+    Non-finite losses are treated as invalid — a NaN would otherwise sort
+    into the top tail and claim a drop slot.
     """
+    valid = valid & jnp.isfinite(loss)
     n = loss.shape[0]
     num_top = jnp.floor(jnp.asarray(fraction) * n).astype(jnp.int32)
     order_top = jnp.argsort(jnp.where(valid, loss, -jnp.inf))
@@ -305,8 +316,13 @@ def histogram_masks(
     The boundary bin is included only if excluding it would under-fill by
     more than half its population — overshoot is bounded by one bin, and
     undershoot is always legal (F is a ceiling, paper Sec. 3.1).
+
+    Non-finite losses count as invalid: one NaN/inf would otherwise stretch
+    the lo/hi span (collapsing every real loss into one bin) or poison the
+    bin index.  Free when everything is finite — the masks are bit-exact.
     """
     n_local = loss.shape[0]
+    valid = valid & jnp.isfinite(loss)
     low_fraction = jnp.asarray(low_fraction, jnp.float32)
 
     psum = functools.partial(_axis_reduce, axis_names=axis_names,

@@ -78,6 +78,7 @@ def scatter_observations(
     pa: jax.Array,
     pc: jax.Array,
     epoch: jax.Array | int,
+    valid: jax.Array | None = None,
 ) -> SampleState:
     """Record (loss, PA, PC) for the samples at ``indices``.
 
@@ -87,26 +88,47 @@ def scatter_observations(
     (last write wins under XLA scatter semantics, matching the paper where a
     sample is observed at most once per epoch anyway).
 
-    Sharding: the update is scatter-only (no cross-sample reductions), so it
-    is GSPMD-safe — with ``state`` row-sharded over the data axes and
-    ``indices`` arbitrary global ids, the partitioner lowers each scatter to
-    an O(B) gather of the updates plus shard-local writes, which is exactly
-    the schedule a hand-written shard_map version would use.  The mesh
-    trainer relies on this to keep the fused observe inside its jitted step
-    without a second, shard-offset state contract.
+    ``valid`` is the numeric guard's score-quarantine mask
+    (``train/guard.py``): entries where it is False scatter the sample's
+    *existing* values back — loss/PA/PC, the ``seen`` epoch, the
+    forgetting-event state all hold — so a non-finite observation is a
+    bit-exact no-op for that sample and the next epoch plan stays finite.
+    ``None`` (the default) is the unguarded path, traced exactly as before.
+    (With duplicate indices an invalid later duplicate restores the
+    *pre-batch* value; irrelevant in practice, since a sample is observed
+    at most once per epoch.)
+
+    Sharding: the update is scatter-only (no cross-sample reductions) plus
+    O(B) gathers, so it is GSPMD-safe — with ``state`` row-sharded over the
+    data axes and ``indices`` arbitrary global ids, the partitioner lowers
+    each scatter to an O(B) gather of the updates plus shard-local writes,
+    which is exactly the schedule a hand-written shard_map version would
+    use.  The mesh trainer relies on this to keep the fused observe inside
+    its jitted step without a second, shard-offset state contract.
     """
     # A forgetting event (FORGET baseline) is a correct -> incorrect flip.
     was_correct = state.prev_correct[indices]
-    forget_inc = (was_correct & ~pa).astype(jnp.int32)
     epoch = jnp.asarray(epoch, jnp.int32)
+    if valid is None:
+        forget_inc = (was_correct & ~pa).astype(jnp.int32)
+        seen_val = jnp.broadcast_to(epoch, indices.shape)
+    else:
+        loss = jnp.where(valid, loss, state.loss[indices])
+        pa = jnp.where(valid, pa, state.pa[indices])
+        pc = jnp.where(valid, pc, state.pc[indices])
+        forget_inc = jnp.where(valid, was_correct & ~pa,
+                               False).astype(jnp.int32)
+        seen_val = jnp.where(valid, epoch, state.seen[indices])
+        pa_prev = jnp.where(valid, pa, state.prev_correct[indices])
     return SampleState(
         loss=state.loss.at[indices].set(loss.astype(jnp.float32)),
         pa=state.pa.at[indices].set(pa),
         pc=state.pc.at[indices].set(pc.astype(jnp.float32)),
         hidden=state.hidden,
-        seen=state.seen.at[indices].set(epoch),
+        seen=state.seen.at[indices].set(seen_val),
         forget_events=state.forget_events.at[indices].add(forget_inc),
-        prev_correct=state.prev_correct.at[indices].set(pa),
+        prev_correct=state.prev_correct.at[indices].set(
+            pa if valid is None else pa_prev),
     )
 
 
@@ -122,16 +144,20 @@ class TrainCarry:
     strategies) ride through K train steps per dispatch, and per-step
     (loss, backward-count) scalars come back as the scan's stacked outputs
     — so the whole block costs one dispatch and the losses one
-    ``device_get`` per epoch.  The host-loop engine threads the same four objects through its
-    per-batch jitted step; sharing the structure is what keeps the two
-    engines' donation/restart contracts identical (a crash between scan
-    blocks leaves a fully live carry to hand back for checkpoint-on-fault).
+    ``device_get`` per epoch.  The host-loop engine threads the same objects
+    through its per-batch jitted step; sharing the structure is what keeps
+    the two engines' donation/restart contracts identical (a crash between
+    scan blocks leaves a fully live carry to hand back for
+    checkpoint-on-fault).  ``gstate`` is the numeric guard's counter pytree
+    (``train/guard.py::GuardState``; None with ``guard_policy="off"``, so
+    the unguarded carry is structurally unchanged).
     """
 
     params: Any
     opt_state: Any
     ef: Any
     sstate: Any
+    gstate: Any = None
 
 
 def with_hidden(state: SampleState, hidden: jax.Array) -> SampleState:

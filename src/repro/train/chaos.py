@@ -1,0 +1,230 @@
+"""Deterministic fault injection for the training stack (chaos harness).
+
+Every injector here is seeded/counted — no wall-clock, no real randomness —
+so a chaos test is exactly as reproducible as the trainer it attacks, and
+"recovery is bit-exact" is a meaningful assertion.  The injectors cover the
+failure modes the resilience layer claims to handle
+(``docs/fault_tolerance.md``):
+
+==============================  ===========================================
+injector                        fault it models
+==============================  ===========================================
+:class:`CrashAtStep`            process death mid-epoch (preemption, OOM
+                                kill) — raises :class:`ChaosError` at a
+                                global train-step boundary, under either
+                                epoch engine
+:func:`poison_samples`          corrupt input records — NaN pixels for
+                                chosen sample ids, exercising the numeric
+                                guard + score quarantine
+:func:`corrupt_checkpoint_leaf` bit-rot on stored checkpoints — seeded
+                                byte flips in a committed leaf, exercising
+                                CRC detection + the restore fallback chain
+:func:`failing_leaf_writes`     failing disks during save — patches the
+                                checkpoint writer's single-leaf seam,
+                                exercising save retry + async failure
+                                propagation
+:class:`SlowShard`              a straggling worker — injectable per-epoch
+                                latency vector for
+                                ``Trainer.shard_latency_fn``
+==============================  ===========================================
+
+``ChaosError`` subclasses ``RuntimeError`` so ``fault.classify_failure``
+treats an injected crash exactly like a real preemption: restartable.
+Used by ``tests/test_chaos.py`` across the full strategy registry × both
+engines.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+
+
+class ChaosError(RuntimeError):
+    """An injected failure.  RuntimeError subclass → restartable."""
+
+
+class CrashAtStep:
+    """Crash the trainer at global train step ``step`` (0-based).
+
+    ``install(trainer)`` wraps the dispatch seam of whichever engine the
+    trainer runs: the host loop's per-batch jitted step (crash *before*
+    dispatching step ``step`` — params/opt/strategy state are at the step
+    boundary, matching a preemption between steps), or the scanned engine's
+    block dispatch (crash before the block that would cover step ``step`` —
+    scan-block granularity, the engine's own crash contract).  Counting is
+    cumulative across epochs; the bomb fires once.
+    """
+
+    def __init__(self, step: int):
+        self.step = int(step)
+        self.steps_done = 0
+        self.fired = False
+
+    def install(self, trainer) -> "CrashAtStep":
+        if trainer.engine.name == "scan":
+            self._install_scan(trainer.engine)
+        else:
+            self._install_host(trainer)
+        return self
+
+    def _install_host(self, trainer) -> None:
+        inner = trainer._train_step
+
+        def bomb(*args, **kwargs):
+            if not self.fired and self.steps_done >= self.step:
+                self.fired = True
+                raise ChaosError(
+                    f"injected crash before train step {self.steps_done}")
+            self.steps_done += 1
+            return inner(*args, **kwargs)
+
+        trainer._train_step = bomb
+
+    def _install_scan(self, engine) -> None:
+        if engine._block is None:
+            engine._build_block()
+        inner = engine._block
+
+        def bomb(carry, xs, epoch, lr):
+            import jax
+            size = jax.tree.leaves(xs)[0].shape[0]
+            if not self.fired and self.steps_done + size > self.step:
+                self.fired = True
+                raise ChaosError(
+                    f"injected crash before the scan block covering step "
+                    f"{self.step} (at step {self.steps_done})")
+            self.steps_done += size
+            return inner(carry, xs, epoch, lr)
+
+        engine._block = bomb
+
+
+class PoisonedDataset:
+    """Dataset wrapper that NaNs the float features of chosen sample ids.
+
+    Poison is applied in both access paths — per-batch ``get`` (host
+    engine) and bulk ``arrays`` (scanned engine's device-resident data) —
+    so either engine sees identical corruption.  Integer arrays (labels)
+    are left intact: the fault modeled is corrupt *features*, and NaN has
+    no integer representation.
+    """
+
+    def __init__(self, base, sample_ids: Sequence[int]):
+        self.base = base
+        self.ids = np.asarray(sorted(int(i) for i in sample_ids))
+
+    @property
+    def num_samples(self) -> int:
+        return self.base.num_samples
+
+    def __getattr__(self, name: str) -> Any:
+        return getattr(self.base, name)
+
+    def _poison(self, batch: dict, mask: np.ndarray) -> dict:
+        out = dict(batch)
+        for k, v in out.items():
+            arr = np.asarray(v)
+            if np.issubdtype(arr.dtype, np.floating) and mask.any():
+                arr = np.array(arr)
+                arr[mask] = np.nan
+                out[k] = arr
+        return out
+
+    def get(self, indices) -> dict:
+        idx = np.asarray(indices)
+        return self._poison(self.base.get(indices), np.isin(idx, self.ids))
+
+    def arrays(self) -> dict:
+        full = self.base.arrays()
+        mask = np.zeros(self.num_samples, bool)
+        mask[self.ids] = True
+        return self._poison(dict(full), mask)
+
+
+def poison_samples(dataset, sample_ids: Sequence[int]) -> PoisonedDataset:
+    """NaN the features of ``sample_ids`` in every access path."""
+    return PoisonedDataset(dataset, sample_ids)
+
+
+def corrupt_checkpoint_leaf(directory: str, step: int | None = None,
+                            leaf: int = 0, seed: int = 0,
+                            num_flips: int = 8) -> str:
+    """Flip bytes in a committed checkpoint leaf (seeded, in place).
+
+    ``step=None`` targets the newest committed step.  The COMMITTED marker
+    and manifest are untouched — the dir still *looks* valid, which is the
+    point: only the CRC check can catch it.  Returns the corrupted file's
+    path.
+    """
+    if step is None:
+        step = ckpt.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}",
+                        f"leaf_{leaf:05d}.npy")
+    data = bytearray(open(path, "rb").read())
+    rng = np.random.default_rng(seed)
+    # Flip payload bytes only (skip the ~128-byte npy header: a garbled
+    # header is an unreadable leaf, a garbled payload is silent bit-rot —
+    # the CRC must catch the latter, the nastier case).
+    lo = min(128, max(len(data) - 1, 0))
+    for pos in rng.integers(lo, len(data), size=num_flips):
+        data[pos] ^= 0xFF
+    with open(path, "wb") as f:
+        f.write(bytes(data))
+    return path
+
+
+@contextlib.contextmanager
+def failing_leaf_writes(fail: int = 1, exc: type[Exception] = OSError,
+                        message: str = "injected I/O failure"):
+    """Patch the checkpoint writer's single-leaf seam to fail.
+
+    The first ``fail`` leaf writes raise ``exc``; later writes go through
+    (``fail=-1`` fails forever).  Models a flaky (or dead) disk under
+    ``checkpoint.save`` — pair with ``save``'s retry loop or
+    ``save_async``'s handle to assert the failure surfaces.
+    """
+    inner = ckpt._write_leaf
+    calls = {"n": 0}
+
+    def flaky(path, arr):
+        calls["n"] += 1
+        if fail < 0 or calls["n"] <= fail:
+            raise exc(message)
+        inner(path, arr)
+
+    ckpt._write_leaf = flaky
+    try:
+        yield calls
+    finally:
+        ckpt._write_leaf = inner
+
+
+class SlowShard:
+    """Per-epoch latency vector with one straggling worker.
+
+    ``Trainer.shard_latency_fn`` drop-in: every worker reports ``base``
+    except ``rank``, which reports ``base * factor`` from epoch
+    ``from_epoch`` on.  Deterministic — the straggler flags on exactly the
+    same epoch every run.
+    """
+
+    def __init__(self, world_size: int, rank: int, factor: float = 4.0,
+                 base: float = 1.0, from_epoch: int = 0):
+        self.world_size = world_size
+        self.rank = rank
+        self.factor = factor
+        self.base = base
+        self.from_epoch = from_epoch
+
+    def __call__(self, epoch: int) -> list[float]:
+        lat = [self.base] * self.world_size
+        if epoch >= self.from_epoch:
+            lat[self.rank] = self.base * self.factor
+        return lat

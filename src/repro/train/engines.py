@@ -70,6 +70,13 @@ class EpochRunResult:
     fwd_samples: int
     bwd_samples: int
     host_syncs: int           # SampleState round trips spent in the loop
+    # Numeric guard counters (train/guard.py) — *cumulative* run totals as
+    # fetched from the device GuardState in the same epoch-end device_get
+    # that materialises the losses (so guarding adds no host syncs); all 0
+    # with the guard off.  The trainer diffs totals into per-epoch stats.
+    nonfinite_steps: int = 0
+    quarantined: int = 0
+    guard_consecutive: int = 0
 
 
 def _all_live(tree) -> bool:
@@ -104,10 +111,12 @@ class HostLoopEngine:
         fuse = tr._fuse
         dev_state = (tr.strategy.get_device_state() if tr._thread_state
                      else None)
+        gstate = tr.guard_state
         # Strategies that don't override observe() (e.g. baseline) keep no
         # per-sample state, so their no-op observe is not a host round trip.
         observes = type(tr.strategy).observe is not SampleStrategy.observe
         loop_syncs = 0
+        host_quarantined = 0
         epoch_dev = jnp.int32(epoch)
         try:
             for idx, batch in tr.pipeline.batches(indices):
@@ -116,10 +125,10 @@ class HostLoopEngine:
                 b = dict(batch)
                 if weight is not None:
                     b["weight"] = jnp.asarray(weight, jnp.float32)
-                (tr.params, tr.opt_state, tr.ef_state, dev_state,
+                (tr.params, tr.opt_state, tr.ef_state, dev_state, gstate,
                  scalar, bwd, metrics) = tr._train_step(
-                    tr.params, tr.opt_state, tr.ef_state, dev_state, b,
-                    jnp.asarray(idx), epoch_dev, lr)
+                    tr.params, tr.opt_state, tr.ef_state, dev_state, gstate,
+                    b, jnp.asarray(idx), epoch_dev, lr)
                 # Device scalars only — converted to floats once at epoch
                 # end, so the loop never blocks on a step's completion.  The
                 # step reports its own backward count (fused-select
@@ -128,7 +137,20 @@ class HostLoopEngine:
                 bwds.append(bwd)
                 if fuse is None:
                     lv, pa, pc = metrics
-                    tr.strategy.observe(idx, lv, pa, pc, epoch)
+                    if gstate is not None and observes:
+                        # Legacy host-observe path under the guard: filter
+                        # the non-finite observations out before the
+                        # strategy scatters them.  This path already syncs
+                        # every batch, so the host-side mask is free.
+                        lv = np.asarray(lv)
+                        valid = np.isfinite(lv) & np.isfinite(np.asarray(pc))
+                        if not valid.all():
+                            host_quarantined += int((~valid).sum())
+                            idx = np.asarray(idx)[valid]
+                            lv, pa, pc = (lv[valid], np.asarray(pa)[valid],
+                                          np.asarray(pc)[valid])
+                    if len(np.asarray(idx)):
+                        tr.strategy.observe(idx, lv, pa, pc, epoch)
                     loop_syncs += int(observes)
         finally:
             # The train step donates dev_state, so mid-epoch the strategy's
@@ -136,18 +158,31 @@ class HostLoopEngine:
             # the latest live state, even on a crash (between dispatches;
             # see _all_live for the inside-a-dispatch case), so
             # checkpoint-on-fault (save_checkpoint -> strategy.state_dict)
-            # stays valid.
+            # stays valid.  The guard counters ride the same contract.
             if tr._thread_state and _all_live(dev_state):
                 tr.strategy.set_device_state(dev_state)
+            if gstate is not None and _all_live(gstate):
+                tr.guard_state = gstate
+            # Host-path quarantines join the cumulative totals the trainer
+            # diffs (the device counters only see fused observations).
+            tr._guard_host_q += host_quarantined
+        nf = qr = consec = 0
         if losses:
-            # The epoch's single loss/work materialisation.
-            ls, bw = jax.device_get((losses, bwds))
+            # The epoch's single loss/work materialisation (guard counters
+            # included — no extra round trip).
+            ls, bw, g = jax.device_get((losses, bwds, gstate))
             ls = np.asarray(ls, np.float64)
             bwd_total = int(np.sum(np.asarray(bw, np.int64)))
+            if g is not None:
+                nf, qr, consec = (int(g.nonfinite_steps), int(g.quarantined),
+                                  int(g.consecutive))
         else:
             ls, bwd_total = np.zeros(0), 0
         return EpochRunResult(losses=ls, fwd_samples=fwd,
-                              bwd_samples=bwd_total, host_syncs=loop_syncs)
+                              bwd_samples=bwd_total, host_syncs=loop_syncs,
+                              nonfinite_steps=nf,
+                              quarantined=qr + tr._guard_host_q,
+                              guard_consecutive=consec)
 
 
 def scan_block_sizes(num_steps: int, scan_steps: int) -> list[int]:
@@ -206,11 +241,12 @@ class ScanEpochEngine:
                     batch = ctx.constrain_rows(batch)
                 if "w" in x:
                     batch["weight"] = x["w"]
-                params, opt_state, ef, sstate, scalar, bwd, _ = step_core(
-                    c.params, c.opt_state, c.ef, c.sstate, batch, x["idx"],
-                    epoch, lr)
-                return TrainCarry(params, opt_state, ef, sstate), (scalar,
-                                                                   bwd)
+                (params, opt_state, ef, sstate, gstate, scalar, bwd,
+                 _) = step_core(
+                    c.params, c.opt_state, c.ef, c.sstate, c.gstate, batch,
+                    x["idx"], epoch, lr)
+                return (TrainCarry(params, opt_state, ef, sstate, gstate),
+                        (scalar, bwd))
             # unroll=True: the K bodies are inlined, reproducing the
             # standalone per-step compilation bit for bit (a rolled while
             # loop compiles the conv grads with different layouts); one
@@ -255,7 +291,8 @@ class ScanEpochEngine:
             if w is not None:
                 xs["w"] = self._place_plan(np.ones((size, bs), np.float32))
             carry = TrainCarry(*jax.tree.map(
-                jnp.copy, (tr.params, tr.opt_state, tr.ef_state, dev_state)))
+                jnp.copy, (tr.params, tr.opt_state, tr.ef_state, dev_state,
+                           tr.guard_state)))
             jax.block_until_ready(
                 self._block(carry, xs, jnp.int32(0), 0.0)[1])
         return len(sizes)
@@ -290,7 +327,8 @@ class ScanEpochEngine:
                  else np.asarray(w, np.float32) for w in w_rows]))
         dev_state = (tr.strategy.get_device_state() if tr._thread_state
                      else None)
-        carry = TrainCarry(tr.params, tr.opt_state, tr.ef_state, dev_state)
+        carry = TrainCarry(tr.params, tr.opt_state, tr.ef_state, dev_state,
+                           tr.guard_state)
         losses, bwds = [], []
         epoch_dev = jnp.int32(epoch)
         try:
@@ -314,13 +352,20 @@ class ScanEpochEngine:
                 tr.ef_state = carry.ef
                 if tr._thread_state:
                     tr.strategy.set_device_state(carry.sstate)
+                if carry.gstate is not None:
+                    tr.guard_state = carry.gstate
         # The epoch's single loss/work materialisation: per-step scalars
         # (loss + the step's backward count) were accumulated on device
-        # across the scan blocks.
-        got_ls, got_bw = jax.device_get((losses, bwds))
+        # across the scan blocks; the guard counters ride the same fetch.
+        got_ls, got_bw, g = jax.device_get((losses, bwds, carry.gstate))
         ls = np.concatenate([np.asarray(x, np.float64) for x in got_ls])
         bwd = int(np.sum(np.concatenate(
             [np.asarray(x, np.int64) for x in got_bw])))
+        nf = qr = consec = 0
+        if g is not None:
+            nf, qr, consec = (int(g.nonfinite_steps), int(g.quarantined),
+                              int(g.consecutive))
         n = num_steps * c.batch_size
         return EpochRunResult(losses=ls, fwd_samples=n, bwd_samples=bwd,
-                              host_syncs=0)
+                              host_syncs=0, nonfinite_steps=nf,
+                              quarantined=qr, guard_consecutive=consec)

@@ -1,49 +1,166 @@
-"""Fault tolerance & elasticity utilities.
+"""Fault tolerance & elasticity: the supervisor layer above the Trainer.
 
-Three concerns at 1000+-node scale, each with a concrete mechanism here:
+Three concerns at 1000+-node scale, each with a concrete mechanism here,
+all exercised end-to-end by the chaos harness (``train/chaos.py`` +
+``tests/test_chaos.py``; see ``docs/fault_tolerance.md``):
 
 1. **Node failure → checkpoint/restart.** ``repro.checkpoint`` provides
-   atomic, CRC-checked, async checkpoints; ``Trainer.restore_latest`` resumes
-   bit-exact (params, optimizer, sampler state incl. KAKURENBO's per-sample
-   loss/PA/PC — losing it would silently disable hiding for an epoch).
-   ``run_with_restarts`` below is the supervisor loop a cluster agent runs.
+   atomic, CRC-checked checkpoints with retry-on-save and a corrupt-dir
+   fallback chain; ``Trainer.restore_latest`` resumes bit-exact (params,
+   optimizer, sampler state incl. KAKURENBO's per-sample loss/PA/PC —
+   losing it would silently disable hiding for an epoch).
+   ``run_with_restarts`` below is the supervisor loop a cluster agent
+   runs: it *classifies* failures (``classify_failure`` — transient
+   XLA/OS/data/checkpoint errors restart, programming bugs don't), backs
+   off exponentially between attempts, enforces a restart budget over a
+   sliding window, and logs every decision.  In-step numeric faults are
+   the Trainer's own guard's job (``train/guard.py``); its
+   ``NonFiniteError`` escalation is a ``RuntimeError`` precisely so it
+   lands in the restartable class here.
 
 2. **Elastic rescaling.** All sampler state is *global* (N-sized arrays);
    workers own deterministic index slices (``data.pipeline.worker_slice``).
    ``rescale_plan`` recomputes every worker's view for a new world size from
    the same epoch permutation — no state migration, resume is bit-exact.
 
-3. **Straggler mitigation.** ``StragglerMonitor`` tracks per-step EMA
+3. **Straggler mitigation.** ``StragglerMonitor`` tracks per-worker EMA
    latency; a worker whose latency exceeds ``threshold`` x median is flagged
    and ``rebalance`` shifts a fraction of its per-epoch samples to the
    fastest workers (KAKURENBO composes naturally: hidden-set shrinkage is
-   uniform across shards, so re-slicing the visible list is safe).
+   uniform across shards, so re-slicing the visible list is safe).  The
+   monitor is wired into the Trainer's epoch loop
+   (``TrainConfig.straggler_mitigation``): epoch latencies — measured, or
+   injected through ``Trainer.shard_latency_fn`` by tests and the chaos
+   harness — feed ``record_epoch``, and a flagged epoch re-slices the next
+   plan through ``rescale_plan`` + ``rebalance``.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
+import time
 from typing import Callable
 
 import numpy as np
 
 from repro.data.pipeline import worker_slice
 
+logger = logging.getLogger("repro.fault")
 
-def run_with_restarts(make_trainer: Callable[[], "object"], total_epochs: int,
-                      max_restarts: int = 3) -> tuple[object, int]:
+#: Failure classes a supervisor restart can plausibly cure: I/O and OS
+#: faults (disk, network filesystems), runtime faults (XLA's
+#: ``XlaRuntimeError`` subclasses RuntimeError — device OOM, preemption —
+#: as do the chaos injectors and the numeric guard's ``NonFiniteError``),
+#: data/checkpoint decode errors, and torn streams.
+RESTARTABLE_EXCEPTIONS: tuple[type[BaseException], ...] = (
+    OSError, RuntimeError, ValueError, EOFError, ConnectionError)
+
+#: Programming bugs: restarting replays the same crash deterministically
+#: and burns the restart budget hiding the stack trace.  Checked *before*
+#: the restartable classes so e.g. KeyError (a LookupError, not a
+#: ValueError) fails fast.
+FATAL_EXCEPTIONS: tuple[type[BaseException], ...] = (
+    TypeError, AttributeError, LookupError, NameError, AssertionError,
+    NotImplementedError, ImportError, SyntaxError)
+
+
+def classify_failure(exc: BaseException) -> str:
+    """``"restartable"`` or ``"fatal"`` for a trainer crash.
+
+    The default policy of ``run_with_restarts``: transient hardware/IO/data
+    faults restart, programming bugs propagate immediately.  Unknown
+    exception types are fatal — restarting on an unclassified failure is
+    how supervisors turn one bug into ``max_restarts`` identical crashes.
+    """
+    if isinstance(exc, FATAL_EXCEPTIONS):
+        return "fatal"
+    if isinstance(exc, RESTARTABLE_EXCEPTIONS):
+        return "restartable"
+    return "fatal"
+
+
+def run_with_restarts(
+    make_trainer: Callable[[], "object"],
+    total_epochs: int,
+    max_restarts: int = 3,
+    *,
+    backoff_base: float = 0.5,
+    backoff_factor: float = 2.0,
+    backoff_max: float = 30.0,
+    restart_window: float | None = None,
+    classify: Callable[[BaseException], str] = classify_failure,
+    sleep_fn: Callable[[float], None] = time.sleep,
+    clock: Callable[[], float] = time.monotonic,
+    on_restart: Callable[[int, BaseException], None] | None = None,
+) -> tuple[object, int]:
     """Supervisor: (re)build the trainer, resume from the latest checkpoint,
-    run; on crash, restart. Returns (trainer, restarts_used)."""
+    run; on a *restartable* crash, back off and restart.
+
+    Returns ``(trainer, restarts_used)``.
+
+    - ``classify`` decides restartable vs fatal (``classify_failure`` by
+      default); fatal failures re-raise immediately.
+    - Backoff between attempts is ``backoff_base * backoff_factor**k``
+      (capped at ``backoff_max``) where ``k`` counts consecutive restarts
+      *without progress* — a crash after the trainer advanced at least one
+      epoch resets the backoff, so a long healthy run isn't punished for
+      its history.  ``backoff_base=0`` disables sleeping.
+    - ``restart_window`` (seconds) makes the budget a sliding window: only
+      restarts within the last window count against ``max_restarts``.
+      ``None`` counts all restarts ever (the legacy budget).
+    - ``sleep_fn``/``clock`` are injectable for tests; ``on_restart(n,
+      exc)`` is a hook for external telemetry.
+    """
     restarts = 0
+    restart_times: list[float] = []
+    stagnant = 0   # consecutive restarts without epoch progress
     while True:
         trainer = make_trainer()
         trainer.restore_latest()
+        start_epoch = int(getattr(trainer, "epoch", 0))
         try:
             trainer.run(total_epochs)
+            if restarts:
+                logger.info("run completed after %d restart(s)", restarts)
             return trainer, restarts
-        except RuntimeError:
-            restarts += 1
-            if restarts > max_restarts:
+        except Exception as e:  # noqa: BLE001 — classified below
+            kind = classify(e)
+            at_epoch = int(getattr(trainer, "epoch", start_epoch))
+            if kind != "restartable":
+                logger.error(
+                    "fatal failure at epoch %d (%s: %s) — not restarting",
+                    at_epoch, type(e).__name__, e)
                 raise
+            restarts += 1
+            now = clock()
+            restart_times.append(now)
+            if restart_window is not None:
+                restart_times = [t for t in restart_times
+                                 if now - t <= restart_window]
+                budget_used = len(restart_times)
+            else:
+                budget_used = restarts
+            stagnant = 0 if at_epoch > start_epoch else stagnant + 1
+            if budget_used > max_restarts:
+                logger.error(
+                    "restart budget exhausted (%d restart(s)%s) after "
+                    "failure at epoch %d (%s: %s)", budget_used,
+                    "" if restart_window is None
+                    else f" within {restart_window:g}s", at_epoch,
+                    type(e).__name__, e)
+                raise
+            delay = (min(backoff_base * backoff_factor ** (stagnant - 1),
+                         backoff_max) if backoff_base > 0 and stagnant
+                     else 0.0)
+            logger.warning(
+                "restartable failure at epoch %d (%s: %s) — restart %d/%d "
+                "(window use %d, backoff %.2fs, progress=%s)", at_epoch,
+                type(e).__name__, e, restarts, max_restarts, budget_used,
+                delay, at_epoch > start_epoch)
+            if on_restart is not None:
+                on_restart(restarts, e)
+            if delay:
+                sleep_fn(delay)
 
 
 @dataclasses.dataclass
@@ -67,10 +184,23 @@ class StragglerMonitor:
         self.ema = ema
         self.threshold = threshold
 
+    @property
+    def world_size(self) -> int:
+        return len(self.lat)
+
     def record(self, rank: int, step_time: float) -> None:
         a = self.ema
         self.lat[rank] = (a * self.lat[rank] + (1 - a) * step_time
                           if self.lat[rank] > 0 else step_time)
+
+    def record_epoch(self, latencies) -> None:
+        """Record one epoch's per-worker latencies (len == world_size)."""
+        if len(latencies) != len(self.lat):
+            raise ValueError(
+                f"got {len(latencies)} latencies for world_size "
+                f"{len(self.lat)}")
+        for rank, t in enumerate(latencies):
+            self.record(rank, float(t))
 
     def stragglers(self) -> np.ndarray:
         med = np.median(self.lat[self.lat > 0]) if (self.lat > 0).any() else 0.0

@@ -1,0 +1,138 @@
+"""In-step numeric guards: detect and contain non-finite loss/grads.
+
+KAKURENBO's hiding decisions are driven entirely by per-sample loss history
+(paper Sec. 3.4), which makes numeric faults *selection* faults, not just
+optimisation faults: a single NaN loss scattered into ``SampleState`` reads
+as "infinitely important" forever — the sample can never be hidden, the
+histogram thresholds of ``core/planops.py`` stretch to the NaN span, and the
+epoch plan silently stops being the paper's.  Importance-sampling baselines
+are known to destabilise under loss outliers (Katharopoulos & Fleuret 2018;
+Jiang et al. 2019), so guarded scoring is a correctness feature here.
+
+The guard runs *inside* the jitted train step (``Trainer._step_core``, both
+the single-device and the mesh-sharded variant, under either epoch engine):
+
+- **detection** — ``all_finite(scalar, grads)`` reduces the step loss and
+  every gradient leaf to one device boolean;
+- **containment** (``guard_policy="skip_update"``) — a non-finite step
+  zeroes the gradients *before* error-feedback compression (so the EF
+  residual is not poisoned) and holds params / optimizer state / EF at
+  their pre-step values via an elementwise select, i.e. the step becomes a
+  no-op for the trajectory;
+- **score quarantine** — per-sample observations with non-finite loss or
+  confidence are dropped from the fused observe scatter
+  (``core/state.py::scatter_observations(valid=...)``): the sample keeps
+  its previous (finite) loss/PA/PC *and* its previous ``seen`` epoch, so
+  the next epoch plan is finite and bit-reproducible;
+- **accounting** — ``GuardState`` carries three device ``i32`` counters
+  (total non-finite steps, consecutive non-finite steps, quarantined
+  observations) through the epoch exactly like the strategy's device state,
+  so the host syncs stay at 1/epoch: the engines fetch the counters in the
+  same ``device_get`` that materialises the per-step losses.
+
+``guard_abort_after=k`` layers an abort policy on top: the trainer checks
+the consecutive counter at the epoch boundary (the only host sync) and
+raises ``NonFiniteError`` once ``k`` consecutive steps were non-finite —
+the supervisor (``train/fault.py::run_with_restarts``) classifies that as
+restartable, which is the right default for transient hardware faults.
+
+With ``guard_policy="off"`` (the default) none of this traces into the
+step: the compiled computation is byte-identical to the unguarded trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+#: Valid ``TrainConfig.guard_policy`` values.
+GUARD_POLICIES = ("off", "skip_update")
+
+
+class NonFiniteError(RuntimeError):
+    """Raised by the trainer's epoch-boundary check when
+    ``guard_abort_after`` consecutive train steps produced a non-finite
+    loss or gradient.  A ``RuntimeError`` subclass on purpose: the
+    supervisor classifies it as restartable (transient-fault default)."""
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GuardState:
+    """Device-resident guard counters threaded through the epoch.
+
+    Rides next to the strategy's device state in the step signature (and in
+    the scanned engine's ``TrainCarry``), so guarding costs zero extra host
+    round trips.  All three are ``i32`` device scalars; under the mesh
+    trainer they are replicated (they summarise the *global* step).
+
+    Attributes:
+      nonfinite_steps: total steps whose loss/grads were non-finite (and —
+        under ``skip_update`` — whose update was therefore skipped).
+      consecutive: current run of consecutive non-finite steps (reset by
+        any finite step); the ``guard_abort_after`` trigger.
+      quarantined: total per-sample observations dropped from the fused
+        observe scatter because their loss/confidence was non-finite.
+    """
+
+    nonfinite_steps: jax.Array
+    consecutive: jax.Array
+    quarantined: jax.Array
+
+
+def init_guard_state() -> GuardState:
+    return GuardState(
+        nonfinite_steps=jnp.int32(0),
+        consecutive=jnp.int32(0),
+        quarantined=jnp.int32(0),
+    )
+
+
+def all_finite(scalar: jax.Array, grads) -> jax.Array:
+    """One device boolean: the step loss and every gradient leaf are finite.
+
+    The O(params) ``isfinite`` reduction is the guard's whole step cost —
+    benchmarked (guard-on vs guard-off) by ``benchmarks/step_throughput.py
+    --guard`` into ``results/BENCH_steps.json`` with a <3% budget.
+    """
+    ok = jnp.isfinite(scalar)
+    for g in jax.tree.leaves(grads):
+        ok = ok & jnp.all(jnp.isfinite(g))
+    return ok
+
+
+def zero_if(bad: jax.Array, grads):
+    """Zero every gradient leaf when ``bad`` (a device bool scalar).
+
+    Applied *before* error-feedback compression so a poisoned gradient
+    never enters the EF residual.
+    """
+    return jax.tree.map(lambda g: jnp.where(bad, jnp.zeros_like(g), g), grads)
+
+
+def select(ok: jax.Array, new, old):
+    """Elementwise pytree select: ``new`` where ``ok`` else ``old``.
+
+    The ``skip_update`` containment: with ``ok=False`` the params /
+    optimizer state / EF residual hold their pre-step values bit-exactly
+    (``where`` never propagates the discarded branch's NaNs).
+    """
+    return jax.tree.map(lambda n, o: jnp.where(ok, n, o), new, old)
+
+
+def observation_valid(loss: jax.Array, pc: jax.Array) -> jax.Array:
+    """(B,) mask of per-sample observations safe to scatter into
+    ``SampleState``: finite loss and finite confidence."""
+    return jnp.isfinite(loss) & jnp.isfinite(pc)
+
+
+def update_counters(gstate: GuardState, ok: jax.Array,
+                    quarantined: jax.Array) -> GuardState:
+    """Advance the counters for one step (all device-side)."""
+    bad = (~ok).astype(jnp.int32)
+    return GuardState(
+        nonfinite_steps=gstate.nonfinite_steps + bad,
+        consecutive=jnp.where(ok, jnp.int32(0), gstate.consecutive + 1),
+        quarantined=gstate.quarantined + quarantined.astype(jnp.int32),
+    )

@@ -43,6 +43,8 @@ the paper's speedup comes from), checkpoint/restart and failure injection.
 from __future__ import annotations
 
 import dataclasses
+import inspect
+import logging
 import math
 import time
 from typing import Any, Callable
@@ -61,7 +63,10 @@ from repro.data.pipeline import Pipeline, materialize
 from repro.dist.compression import compress_grads, init_error_feedback
 from repro.dist.sharding import ParallelCtx, shard_map_compat
 from repro.optim.optimizers import Optimizer, make_optimizer
+from repro.train import guard
 from repro.train.engines import HostLoopEngine, ScanEpochEngine
+
+logger = logging.getLogger("repro.train")
 
 
 @dataclasses.dataclass
@@ -123,6 +128,36 @@ class TrainConfig:
     # block is unrolled, so compile time grows with this; dispatch count
     # shrinks as 1/scan_steps).
     scan_steps: int = 8
+    # Numeric guard (train/guard.py): "off" traces the byte-identical
+    # unguarded step; "skip_update" detects non-finite loss/grads inside
+    # the jitted step, holds params/opt/EF at their pre-step values, and
+    # quarantines the batch's per-sample observations so poisoned losses
+    # never enter SampleState or the next epoch's hiding plan.  Counters
+    # ride the device carry — host syncs stay at 1/epoch.
+    guard_policy: str = "off"
+    # With the guard on, abort the run (raise guard.NonFiniteError, which
+    # the supervisor classifies as restartable) once this many *consecutive*
+    # train steps were non-finite.  0 disables the abort; the check runs at
+    # the epoch boundary, the run's only host sync.
+    guard_abort_after: int = 0
+    # Save checkpoints on a background thread (checkpoint.save_async).  The
+    # trainer keeps the pending handle and re-raises any save failure at
+    # the next checkpoint boundary — and never GCs older checkpoints until
+    # the newer save is confirmed on disk.
+    async_checkpoint: bool = False
+    # Wire train/fault.py's StragglerMonitor into the epoch loop: per-epoch
+    # worker latencies (measured, or injected via Trainer.shard_latency_fn
+    # for tests/chaos) feed the monitor, and flagged stragglers shed a
+    # fraction of their next epoch's rows to the other workers via
+    # fault.rescale_plan/rebalance.  Off by default: the default uniform
+    # latencies never flag, so the epoch plan is bit-identical to the
+    # unmonitored trainer.
+    straggler_mitigation: bool = False
+    # World size the straggler monitor models.  0 = the mesh's data-parallel
+    # degree (1 off-mesh).  Setting it >1 off-mesh simulates a multi-worker
+    # deployment in one process — how the chaos suite drives slow-shard
+    # scenarios without a device mesh.
+    straggler_workers: int = 0
 
 
 @dataclasses.dataclass
@@ -141,6 +176,11 @@ class EpochStats:
     host_syncs: int = 0
     # Which epoch engine dispatched the batch loop ("host" | "scan").
     engine: str = "host"
+    # Numeric guard accounting for this epoch (0 with guard_policy="off"):
+    # train steps whose update was skipped for non-finite loss/grads, and
+    # per-sample observations quarantined from the fused observe scatter.
+    nonfinite_steps: int = 0
+    quarantined_observations: int = 0
 
 
 class Trainer:
@@ -170,9 +210,28 @@ class Trainer:
         self.opt_state = self.opt.init(self.params)
         self.ef_state = (init_error_feedback(self.params)
                          if cfg.grad_compression else None)
+        # Numeric guard counters (train/guard.py): device-resident, threaded
+        # through the step like the strategy's state, never checkpointed
+        # (they are run diagnostics, not trajectory).  _guard_seen tracks
+        # the cumulative totals already reported, so EpochStats get deltas.
+        self.guard_state = (guard.init_guard_state()
+                            if cfg.guard_policy != "off" else None)
+        self._guard_seen = (0, 0)
+        self._guard_host_q = 0    # legacy host-observe path's quarantines
+        self._pending_save = None  # async-checkpoint handle, see save_checkpoint
         self._place()
         self.epoch = 0
         self.history: list[EpochStats] = []
+        # Straggler mitigation (train/fault.py): per-epoch worker latencies
+        # feed the monitor; tests/chaos inject skew via shard_latency_fn.
+        if cfg.straggler_mitigation:
+            from repro.train import fault as _fault
+            self._straggler = _fault.StragglerMonitor(
+                world_size=cfg.straggler_workers
+                or max(self.ctx.dp_size, 1))
+        else:
+            self._straggler = None
+        self.shard_latency_fn: Callable[[int], list[float]] | None = None
         # ctx reaches strategies whose constructor declares it (kakurenbo,
         # random): their SampleState is row-sharded and their plan step runs
         # the cross-shard selection. Other strategies stay host/uncommitted
@@ -195,6 +254,15 @@ class Trainer:
                 f"TrainConfig.grad_allreduce={c.grad_allreduce!r}: must be "
                 "'fold' (deterministic chunk-major fold) or 'psum' (fast "
                 "O(params) all-reduce)")
+        if c.guard_policy not in guard.GUARD_POLICIES:
+            raise ValueError(
+                f"TrainConfig.guard_policy={c.guard_policy!r}: must be one "
+                f"of {guard.GUARD_POLICIES}")
+        if c.guard_abort_after and c.guard_policy == "off":
+            raise ValueError(
+                "TrainConfig.guard_abort_after requires "
+                "guard_policy='skip_update' — with the guard off no "
+                "non-finite steps are ever counted")
         if not c.mesh_shape:
             return ParallelCtx()
         from repro.launch.mesh import make_data_mesh
@@ -220,6 +288,9 @@ class Trainer:
         self.opt_state = self.ctx.replicate(self.opt_state)
         if self.ef_state is not None:
             self.ef_state = self.ctx.replicate(self.ef_state)
+        if self.guard_state is not None:
+            # Guard counters summarise the *global* step: replicated.
+            self.guard_state = self.ctx.replicate(self.guard_state)
 
     # Legacy alias: tests and notebooks reach sampler state via tr.sampler.
     @property
@@ -249,6 +320,9 @@ class Trainer:
             return
         opt, loss_fn, compress = self.opt, self.loss_fn, self.cfg.grad_compression
         batch_size = self.cfg.batch_size
+        guarded = self.cfg.guard_policy != "off"
+        fuse_valid = (guarded and fuse is not None
+                      and "valid" in inspect.signature(fuse).parameters)
 
         # The un-jitted step math, shared by both epoch engines: the host
         # loop jits it per batch, the scanned engine inlines it into its
@@ -256,13 +330,26 @@ class Trainer:
         # bit-identical by construction.  The step reports its backward
         # sample count as a device scalar (the full batch, or the fused
         # select's surviving count) so work accounting never syncs mid-epoch.
-        def train_step(params, opt_state, ef, sstate, batch, indices, epoch,
-                       lr):
+        # ``guarded`` branches are trace-time: with guard_policy="off" the
+        # compiled step is byte-identical to the unguarded trainer (gstate
+        # is the empty None pytree then).
+        def train_step(params, opt_state, ef, sstate, gstate, batch, indices,
+                       epoch, lr):
             if fsel is not None:
                 # Forward-only loss at the current params drives the in-step
                 # selection; the chosen weights mask the backward pass.
                 _, (lv0, _, _) = loss_fn(params, batch)
-                w_sel, sstate = fsel(sstate, lv0)
+                if guarded:
+                    # A non-finite selection loss would poison the select
+                    # state's history: hold the state and fall back to
+                    # training the full batch (where/select never propagate
+                    # the discarded branch).
+                    ok0 = jnp.all(jnp.isfinite(lv0))
+                    w_new, s_new = fsel(sstate, lv0)
+                    sstate = guard.select(ok0, s_new, sstate)
+                    w_sel = jnp.where(ok0, w_new, jnp.ones_like(w_new))
+                else:
+                    w_sel, sstate = fsel(sstate, lv0)
                 batch = dict(batch)
                 batch["weight"] = (batch["weight"] * w_sel
                                    if "weight" in batch else w_sel)
@@ -271,20 +358,58 @@ class Trainer:
                 bwd = jnp.int32(batch_size)
             (scalar, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch)
+            if guarded:
+                ok = guard.all_finite(scalar, grads)
+                if compress:
+                    # Zero *before* compression so a poisoned gradient never
+                    # enters the error-feedback residual; the select below
+                    # then restores the residual (and params/opt) bit-exactly.
+                    # Without compression nothing stateful sees the raw
+                    # grads before the select, so the O(params) zeroing pass
+                    # is skipped (the select alone discards the bad update —
+                    # ``where`` never propagates the dropped branch's NaNs).
+                    grads = guard.zero_if(~ok, grads)
+                prev = (params, opt_state, ef)
             if compress:
                 grads, ef = compress_grads(grads, ef)
             params, opt_state = opt.update(grads, opt_state, params, lr)
+            if guarded:
+                params, opt_state, ef = guard.select(
+                    ok, (params, opt_state, ef), prev)
             if fuse is not None:
                 lv, pa, pc = metrics
-                sstate = fuse(sstate, indices, lv, pa, pc, epoch)
-            return params, opt_state, ef, sstate, scalar, bwd, metrics
+                if fuse_valid:
+                    # Score quarantine: per-sample observations with
+                    # non-finite loss/confidence scatter their previous
+                    # values back (core/state.py), keeping the next epoch's
+                    # hiding plan finite.
+                    valid = guard.observation_valid(lv, pc)
+                    sstate = fuse(sstate, indices, lv, pa, pc, epoch,
+                                  valid=valid)
+                    quarantined = jnp.sum(~valid).astype(jnp.int32)
+                elif guarded:
+                    # External fused observe without a ``valid`` parameter:
+                    # degrade to all-or-nothing — any bad observation skips
+                    # the whole batch's scatter.
+                    valid = guard.observation_valid(lv, pc)
+                    s_new = fuse(sstate, indices, lv, pa, pc, epoch)
+                    sstate = guard.select(jnp.all(valid), s_new, sstate)
+                    quarantined = jnp.sum(~valid).astype(jnp.int32)
+                else:
+                    sstate = fuse(sstate, indices, lv, pa, pc, epoch)
+            if guarded:
+                if fuse is None:
+                    quarantined = jnp.int32(0)
+                gstate = guard.update_counters(gstate, ok, quarantined)
+            return (params, opt_state, ef, sstate, gstate, scalar, bwd,
+                    metrics)
 
         def eval_step(params, batch):
             _, metrics = loss_fn(params, batch)
             return metrics
 
         self._step_core = train_step
-        self._train_step = jax.jit(train_step, donate_argnums=(0, 1, 2, 3))
+        self._train_step = jax.jit(train_step, donate_argnums=(0, 1, 2, 3, 4))
         self._eval_step = jax.jit(eval_step)
         self.engine = self._make_engine()
 
@@ -380,10 +505,34 @@ class Trainer:
         ctx = self.ctx
         mesh = ctx.mesh
         opt, loss_fn, compress = self.opt, self.loss_fn, self.cfg.grad_compression
+        guarded = self.cfg.guard_policy != "off"
+        fuse_valid = (guarded and fuse is not None
+                      and "valid" in inspect.signature(fuse).parameters)
         C = self.cfg.grad_chunks
         D = ctx.dp_size
         local_chunks = C // D
         chunk_rows = self.cfg.batch_size // C
+
+        # Numeric guard inside the shard_map cores: the check runs on the
+        # *reduced* gradients (post-fold / post-pmean), which are already
+        # replicated — so ``ok`` is the same device bool on every shard and
+        # the held/advanced select cannot diverge across the mesh.  The
+        # zero-before-compress / select-after-update containment is the
+        # single-device step's, verbatim.
+        def _guard_update(params, opt_state, ef, scalar, grads, lr):
+            ok = guard.all_finite(scalar, grads)
+            if compress:
+                # Only the EF residual sees the raw grads pre-select; zero
+                # them first so it is never poisoned.  Uncompressed, the
+                # post-update select alone contains the fault.
+                grads = guard.zero_if(~ok, grads)
+            prev = (params, opt_state, ef)
+            if compress:
+                grads, ef = compress_grads(grads, ef)
+            params, opt_state = opt.update(grads, opt_state, params, lr)
+            params, opt_state, ef = guard.select(
+                ok, (params, opt_state, ef), prev)
+            return params, opt_state, ef, ok
 
         def local_core_psum(params, opt_state, ef, batch, lr):
             # Fast mode: one loss/grad over the local rows, one O(params)
@@ -395,6 +544,10 @@ class Trainer:
                 loss_fn, has_aux=True)(params, batch)
             grads = jax.lax.pmean(grads, "data")
             scalar = jax.lax.pmean(scalar, "data")
+            if guarded:
+                params, opt_state, ef, ok = _guard_update(
+                    params, opt_state, ef, scalar, grads, lr)
+                return params, opt_state, ef, scalar, metrics, ok
             if compress:
                 grads, ef = compress_grads(grads, ef)
             params, opt_state = opt.update(grads, opt_state, params, lr)
@@ -432,11 +585,15 @@ class Trainer:
             # fold/C is exactly the global-batch mean (equal chunk sizes).
             scalar = fold(gathered[1]) / C
             grads = jax.tree.map(lambda g: g / C, grads)
+            metrics = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *mets)
+            if guarded:
+                params, opt_state, ef, ok = _guard_update(
+                    params, opt_state, ef, scalar, grads, lr)
+                return params, opt_state, ef, scalar, metrics, ok
             if compress:
                 grads, ef = compress_grads(grads, ef)
             params, opt_state = opt.update(grads, opt_state, params, lr)
-            metrics = jax.tree.map(
-                lambda *xs: jnp.concatenate(xs, axis=0), *mets)
             return params, opt_state, ef, scalar, metrics
 
         core = shard_map_compat(
@@ -444,14 +601,15 @@ class Trainer:
             else local_core,
             mesh=mesh,
             in_specs=(P(), P(), P(), P("data"), P()),
-            out_specs=(P(), P(), P(), P(), P("data")))
+            out_specs=(P(), P(), P(), P(), P("data"))
+            + ((P(),) if guarded else ()))
 
         batch_size = self.cfg.batch_size
         rep_sharding = NamedSharding(mesh, P())
         rows_sharding = NamedSharding(mesh, ctx.rows_spec)
 
-        def train_step(params, opt_state, ef, sstate, batch, indices, epoch,
-                       lr):
+        def train_step(params, opt_state, ef, sstate, gstate, batch, indices,
+                       epoch, lr):
             if fsel is not None:
                 _, (lv0, _, _) = loss_fn(params, batch)
                 # Replicate the loss vector and the (global-history) select
@@ -461,7 +619,17 @@ class Trainer:
                 sstate = jax.tree.map(
                     lambda x: jax.lax.with_sharding_constraint(
                         x, rep_sharding), sstate)
-                w_sel, sstate = fsel(sstate, lv0)
+                if guarded:
+                    # Same containment as the single-device step: a
+                    # non-finite selection loss holds the select state and
+                    # trains the full batch.  lv0 is replicated, so ok0 is
+                    # too — no cross-shard divergence.
+                    ok0 = jnp.all(jnp.isfinite(lv0))
+                    w_new, s_new = fsel(sstate, lv0)
+                    sstate = guard.select(ok0, s_new, sstate)
+                    w_sel = jnp.where(ok0, w_new, jnp.ones_like(w_new))
+                else:
+                    w_sel, sstate = fsel(sstate, lv0)
                 bwd = jnp.count_nonzero(w_sel).astype(jnp.int32)
                 w_sel = jax.lax.with_sharding_constraint(w_sel, rows_sharding)
                 batch = dict(batch)
@@ -469,20 +637,43 @@ class Trainer:
                                    if "weight" in batch else w_sel)
             else:
                 bwd = jnp.int32(batch_size)
-            params, opt_state, ef, scalar, metrics = core(
-                params, opt_state, ef, batch, lr)
+            if guarded:
+                params, opt_state, ef, scalar, metrics, ok = core(
+                    params, opt_state, ef, batch, lr)
+            else:
+                params, opt_state, ef, scalar, metrics = core(
+                    params, opt_state, ef, batch, lr)
             if fuse is not None:
                 lv, pa, pc = metrics
-                sstate = fuse(sstate, indices, lv, pa, pc, epoch)
+                if fuse_valid:
+                    # Score quarantine over the row-sharded metrics: the
+                    # masked scatter partitions exactly like the unguarded
+                    # one (O(B) gathers + shard-local writes).
+                    valid = guard.observation_valid(lv, pc)
+                    sstate = fuse(sstate, indices, lv, pa, pc, epoch,
+                                  valid=valid)
+                    quarantined = jnp.sum(~valid).astype(jnp.int32)
+                elif guarded:
+                    valid = guard.observation_valid(lv, pc)
+                    s_new = fuse(sstate, indices, lv, pa, pc, epoch)
+                    sstate = guard.select(jnp.all(valid), s_new, sstate)
+                    quarantined = jnp.sum(~valid).astype(jnp.int32)
+                else:
+                    sstate = fuse(sstate, indices, lv, pa, pc, epoch)
                 sstate = ctx.constrain_rows(sstate)
-            return params, opt_state, ef, sstate, scalar, bwd, metrics
+            if guarded:
+                if fuse is None:
+                    quarantined = jnp.int32(0)
+                gstate = guard.update_counters(gstate, ok, quarantined)
+            return (params, opt_state, ef, sstate, gstate, scalar, bwd,
+                    metrics)
 
         def eval_step(params, batch):
             _, metrics = loss_fn(params, batch)
             return metrics
 
         self._step_core = train_step
-        self._train_step = jax.jit(train_step, donate_argnums=(0, 1, 2, 3))
+        self._train_step = jax.jit(train_step, donate_argnums=(0, 1, 2, 3, 4))
         # Forward-only metrics are per-sample (no cross-sample reductions in
         # the loss vector), so plain GSPMD over the sharded batch is already
         # bit-identical across mesh sizes; no chunking needed.
@@ -513,6 +704,34 @@ class Trainer:
             self._place()
         return plan.visible_indices, plan
 
+    def _rebalanced_order(self, indices: np.ndarray) -> np.ndarray:
+        """Re-slice an epoch's visible order when stragglers are flagged.
+
+        The plan's global order is deterministically split into per-worker
+        views (``fault.rescale_plan``/``worker_slice``), flagged stragglers
+        shed a fraction of their rows to the fastest workers
+        (``StragglerMonitor.rebalance``), and the views are re-flattened —
+        rebalanced workers first, then the slice-trimmed tail, so every
+        visible sample still trains exactly once.  With no straggler
+        flagged (the default: uniform latencies) this returns ``indices``
+        unchanged — bit-identical plans.
+        """
+        from repro.train import fault as _fault
+        mon = self._straggler
+        if mon.world_size <= 1 or not mon.stragglers().any():
+            return indices
+        idx = np.asarray(indices)
+        bs = self.cfg.batch_size
+        chunk = mon.world_size * bs
+        n_used = (len(idx) // chunk) * chunk
+        rp = _fault.rescale_plan(idx[:n_used], mon.world_size, bs)
+        per_worker = mon.rebalance(rp.per_worker)
+        logger.warning(
+            "straggler mitigation: stragglers %s — rebalanced worker rows "
+            "%s", np.nonzero(mon.stragglers())[0].tolist(),
+            [len(w) for w in per_worker])
+        return np.concatenate([*per_worker, idx[n_used:]])
+
     def run_epoch(self, epoch: int) -> EpochStats:
         c = self.cfg
         t0 = time.perf_counter()
@@ -521,8 +740,42 @@ class Trainer:
         # The batch loop is the engine's job (train/engines.py): the host
         # loop dispatches one jitted step per batch; the scanned engine
         # gathers batches on device and dispatches scan_steps-sized blocks.
+        if self._straggler is not None:
+            indices = self._rebalanced_order(indices)
         res = self.engine.run_epoch(epoch, indices, plan, lr)
+        if self._straggler is not None:
+            # Feed the monitor this epoch's per-worker latencies.  Measured
+            # wall time is uniform across simulated workers (one process),
+            # so the default never flags and the plan stays bit-identical;
+            # tests/chaos inject skew through shard_latency_fn.
+            w = self._straggler.world_size
+            lat = (self.shard_latency_fn(epoch)
+                   if self.shard_latency_fn is not None
+                   else [(time.perf_counter() - t0) / w] * w)
+            self._straggler.record_epoch(lat)
         fwd, bwd = res.fwd_samples, res.bwd_samples
+        # Guard accounting: the engine reports the device counters'
+        # cumulative totals (fetched inside its single epoch-end
+        # device_get); diff against what was already reported so the stats
+        # are per-epoch.  The abort policy also lives here — the epoch
+        # boundary is the run's only host sync.
+        nonfinite = quarantined = 0
+        if self.guard_state is not None:
+            nonfinite = res.nonfinite_steps - self._guard_seen[0]
+            quarantined = res.quarantined - self._guard_seen[1]
+            self._guard_seen = (res.nonfinite_steps, res.quarantined)
+            if nonfinite:
+                logger.warning(
+                    "numeric guard: epoch %d skipped %d non-finite step(s), "
+                    "quarantined %d observation(s) (consecutive=%d)",
+                    epoch, nonfinite, quarantined, res.guard_consecutive)
+            if (c.guard_abort_after
+                    and res.guard_consecutive >= c.guard_abort_after):
+                raise guard.NonFiniteError(
+                    f"{res.guard_consecutive} consecutive non-finite train "
+                    f"steps at epoch {epoch} (guard_abort_after="
+                    f"{c.guard_abort_after}) — params are held at the last "
+                    "finite update; restart from the latest checkpoint")
         if plan.needs_refresh:
             # KAKURENBO step D: forward-only refresh of the hidden list.
             def fwd_fn(idx):
@@ -539,7 +792,9 @@ class Trainer:
             fwd_samples=fwd, bwd_samples=bwd, lr=lr,
             wall_time=time.perf_counter() - t0,
             host_syncs=plan.host_syncs + res.host_syncs,
-            engine=self.engine.name)
+            engine=self.engine.name,
+            nonfinite_steps=nonfinite,
+            quarantined_observations=quarantined)
         self.history.append(stats)
         self.epoch = epoch + 1
         if (c.checkpoint_dir and c.checkpoint_every
@@ -556,6 +811,8 @@ class Trainer:
             if fail_at_epoch is not None and self.epoch == fail_at_epoch:
                 raise RuntimeError(f"injected failure at epoch {self.epoch}")
             self.run_epoch(self.epoch)
+        # Surface a failed trailing async save before reporting success.
+        self.finish_checkpoints()
         return self.history
 
     # ------------------------------------------------------------------ eval
@@ -599,10 +856,30 @@ class Trainer:
         # diverges from the uninterrupted one
         # (caught by test_checkpoint_restart_bit_exact).
         sd = self.strategy.state_dict()
+        meta = {"epoch": self.epoch, "strategy": sd["host"]}
+        if self.cfg.async_checkpoint:
+            # Join the previous handle first: a failed background save must
+            # surface *before* we start the next one — and older
+            # checkpoints are only GC'd after the newer save is confirmed
+            # on disk (keep=None disables save()'s own GC on the thread),
+            # so a crash chain can always fall back to a real checkpoint.
+            self.finish_checkpoints()
+            self._pending_save = ckpt.save_async(
+                self.cfg.checkpoint_dir, self.epoch, self._ckpt_tree(sd),
+                metadata=meta, keep=None)
+            return self._pending_save.path
         return ckpt.save(self.cfg.checkpoint_dir, self.epoch,
-                         self._ckpt_tree(sd),
-                         metadata={"epoch": self.epoch,
-                                   "strategy": sd["host"]})
+                         self._ckpt_tree(sd), metadata=meta)
+
+    def finish_checkpoints(self) -> None:
+        """Join any pending async save — re-raising its failure — then GC
+        superseded checkpoints.  Called between async saves and at the end
+        of ``run()``; safe to call any time."""
+        if self._pending_save is None:
+            return
+        self._pending_save.join()
+        self._pending_save = None
+        ckpt.gc(self.cfg.checkpoint_dir)
 
     def restore_latest(self) -> bool:
         if not self.cfg.checkpoint_dir:

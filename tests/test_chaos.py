@@ -1,0 +1,325 @@
+"""Chaos suite: deterministic fault injection across the training stack.
+
+The resilience acceptance bar (ISSUE 9): for every registered strategy
+under both epoch engines, an injected mid-epoch crash must recover
+*bit-exactly* through the checkpoint/restart supervisor; an injected NaN
+batch must train to finite params with the poisoned sample quarantined
+from the hiding plan; a corrupt newest checkpoint must fall back to the
+prior committed step with a logged quarantine; failing save I/O must
+retry or surface.  All injectors are seeded/counted (``train/chaos.py``)
+— every failure fires at the same place on every run.
+"""
+from __future__ import annotations
+
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import ForgetConfig, KakurenboConfig, LRSchedule
+from repro.data import SyntheticClassification
+from repro.models import cnn
+from repro.train import Trainer, TrainConfig, chaos, fault, guard
+
+CFG_MODEL = cnn.CNNConfig(image_size=8, widths=(8,), hidden=16)
+
+ALL_STRATEGIES = ("baseline", "forget", "gradmatch", "infobatch", "iswr",
+                  "kakurenbo", "random", "sb")
+ENGINES = ("host", "scan")
+
+
+def _fns():
+    def init_params(rng):
+        return cnn.init(rng, CFG_MODEL)
+
+    def loss_fn(params, batch):
+        logits = cnn.forward(params, CFG_MODEL, batch["images"])
+        loss, pa, pc = cnn.per_sample_metrics(logits, batch["labels"])
+        w = batch.get("weight")
+        scalar = jnp.mean(loss * w) if w is not None else jnp.mean(loss)
+        return scalar, (loss, pa, pc)
+
+    return init_params, loss_fn
+
+
+def _mk(engine, strategy="kakurenbo", epochs=3, num_samples=192, seed=0,
+        checkpoint_dir=None, ds=None, **tc_kw):
+    ds = ds or SyntheticClassification(num_samples=num_samples, image_size=8,
+                                       seed=0)
+    init_params, loss_fn = _fns()
+    tc = TrainConfig(
+        epochs=epochs, batch_size=64, strategy=strategy, engine=engine,
+        lr=LRSchedule(0.05, "cosine", epochs, 1),
+        kakurenbo=KakurenboConfig(max_fraction=0.3,
+                                  fraction_milestones=(0, 1, 2, 3)),
+        forget=ForgetConfig(fraction=0.3, warmup_epochs=2),
+        seed=seed, checkpoint_dir=checkpoint_dir,
+        checkpoint_every=1 if checkpoint_dir else 0, scan_steps=2, **tc_kw)
+    return Trainer(tc, init_params, loss_fn, ds, None)
+
+
+def _assert_state_equal(tr_a, tr_b, tag):
+    for a, b in zip(jax.tree.leaves(tr_a.params),
+                    jax.tree.leaves(tr_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=tag)
+    sa = tr_a.strategy.get_device_state()
+    sb = tr_b.strategy.get_device_state()
+    if sa is not None:
+        for a, b in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+            if jnp.issubdtype(a.dtype, jax.dtypes.prng_key):
+                a, b = jax.random.key_data(a), jax.random.key_data(b)
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=tag)
+
+
+# --------------------------------------------------------------------------
+# crash-at-step-k -> supervisor restart -> bit-exact recovery
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_crash_recovery_bit_exact(strategy, engine, tmp_path):
+    """Kill the trainer mid-epoch-1 at a fixed global step; the supervisor
+    must restart from the epoch-1 checkpoint and land bit-identical —
+    params AND strategy device state (incl. RNG keys) — to a run that
+    never crashed.  The whole registry, both engines."""
+    tag = f"{strategy}/{engine}"
+    tr_ref = _mk(engine, strategy)
+    tr_ref.run(3)
+
+    builds = []
+
+    def make():
+        tr = _mk(engine, strategy, checkpoint_dir=str(tmp_path / "ckpt"))
+        builds.append(tr)
+        if len(builds) == 1:
+            # 3 steps/epoch (192 samples / batch 64): step 4 is inside
+            # epoch 1 — a genuine mid-epoch kill, not an epoch-boundary one.
+            chaos.CrashAtStep(4).install(tr)
+        return tr
+
+    tr2, restarts = fault.run_with_restarts(make, 3, sleep_fn=lambda s: None)
+    assert restarts == 1, tag
+    assert builds[0] is not tr2 and len(builds) == 2, tag
+    assert tr2.epoch == 3, tag
+    _assert_state_equal(tr_ref, tr2, tag)
+
+
+def test_crash_injector_fires_where_told(tmp_path):
+    """The bomb's accounting: the host-engine bomb crashes before
+    dispatching the requested step, the scan bomb before the block that
+    would cover it."""
+    tr = _mk("host", "baseline", checkpoint_dir=str(tmp_path / "h"))
+    bomb = chaos.CrashAtStep(4).install(tr)
+    with pytest.raises(chaos.ChaosError):
+        tr.run(3)
+    assert bomb.fired and bomb.steps_done == 4
+    assert tr.epoch == 1   # epoch 0 completed + checkpointed
+
+    tr = _mk("scan", "baseline", checkpoint_dir=str(tmp_path / "s"))
+    bomb = chaos.CrashAtStep(4).install(tr)
+    with pytest.raises(chaos.ChaosError):
+        tr.run(3)
+    # scan_steps=2: epoch 1's first block covers steps 3-4 -> crash before
+    # it, at the scan engine's block granularity.
+    assert bomb.fired and bomb.steps_done == 3
+    assert tr.epoch == 1
+
+
+# --------------------------------------------------------------------------
+# NaN-in-batch -> numeric guard + score quarantine
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_nan_batch_guard_and_quarantine(engine):
+    """A poisoned sample must not reach params (update skipped) nor the
+    hiding plan (observation quarantined: the sample keeps its never-seen
+    sentinel state, so it stays maximally important and unhidden)."""
+    poisoned = chaos.poison_samples(
+        SyntheticClassification(num_samples=192, image_size=8, seed=0), [7])
+    tr = _mk(engine, "kakurenbo", ds=poisoned, guard_policy="skip_update")
+    hist = tr.run(3)
+    for leaf in jax.tree.leaves(tr.params):
+        assert np.isfinite(np.asarray(leaf)).all(), engine
+    # every epoch sees the poisoned batch once
+    assert [h.nonfinite_steps for h in hist] == [1, 1, 1], engine
+    assert all(h.quarantined_observations >= 1 for h in hist), engine
+    st = tr.strategy.get_device_state()
+    assert float(st.loss[7]) == pytest.approx(1e9), engine
+    assert int(st.seen[7]) == -1, engine
+    assert not bool(st.hidden[7]), engine       # never in the hiding plan
+    # the plan the *next* epoch would draw is finite and excludes 7
+    plan = tr.strategy.plan(3)
+    assert 7 not in np.asarray(plan.hidden_indices), engine
+    assert 7 in np.asarray(plan.visible_indices), engine
+
+
+def test_nan_batch_without_guard_poisons_params():
+    """Control: guard off, the same poison propagates — the failure mode
+    the guard exists for."""
+    poisoned = chaos.poison_samples(
+        SyntheticClassification(num_samples=192, image_size=8, seed=0), [7])
+    tr = _mk("scan", "kakurenbo", ds=poisoned)
+    tr.run(3)
+    assert not all(np.isfinite(np.asarray(leaf)).all()
+                   for leaf in jax.tree.leaves(tr.params))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_guard_clean_run_bit_identical(engine):
+    """On finite data the guarded step must be a bit-exact no-op — the
+    skip_update containment may never perturb a healthy trajectory."""
+    tr_off = _mk(engine, "kakurenbo")
+    tr_on = _mk(engine, "kakurenbo", guard_policy="skip_update")
+    h_off, h_on = tr_off.run(3), tr_on.run(3)
+    assert [h.train_loss for h in h_off] == [h.train_loss for h in h_on]
+    assert all(h.nonfinite_steps == 0 for h in h_on)
+    _assert_state_equal(tr_off, tr_on, engine)
+    # the guard rides the device carry: still one host sync per epoch
+    assert all(h.host_syncs == 1 for h in h_on)
+
+
+def test_guard_abort_after_consecutive_nonfinite():
+    """With every batch poisoned, ``guard_abort_after`` must escalate to
+    NonFiniteError at the epoch boundary — and the supervisor must class
+    it restartable."""
+    poisoned = chaos.poison_samples(
+        SyntheticClassification(num_samples=192, image_size=8, seed=0),
+        range(192))
+    tr = _mk("scan", "baseline", ds=poisoned, guard_policy="skip_update",
+             guard_abort_after=2)
+    with pytest.raises(guard.NonFiniteError):
+        tr.run(3)
+    assert fault.classify_failure(guard.NonFiniteError("x")) == "restartable"
+    # containment held even while aborting
+    for leaf in jax.tree.leaves(tr.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+# --------------------------------------------------------------------------
+# corrupt-checkpoint-leaf -> CRC fallback chain
+# --------------------------------------------------------------------------
+
+
+def test_corrupt_newest_checkpoint_falls_back(tmp_path, caplog):
+    """Bit-rot the newest committed checkpoint: restore must land on the
+    prior committed step, quarantine the corrupt dir, and log it."""
+    cdir = str(tmp_path / "ckpt")
+    tr = _mk("scan", "kakurenbo", checkpoint_dir=cdir)
+    tr.run(3)   # commits steps 1, 2, 3
+    chaos.corrupt_checkpoint_leaf(cdir)   # newest = step 3
+
+    tr2 = _mk("scan", "kakurenbo", checkpoint_dir=cdir)
+    with caplog.at_level(logging.WARNING, logger="repro.checkpoint"):
+        assert tr2.restore_latest()
+    assert tr2.epoch == 2                         # prior committed step
+    assert any("quarantined" in m for m in caplog.messages)
+    names = sorted(p.name for p in (tmp_path / "ckpt").iterdir())
+    assert "corrupt_step_0000000003" in names
+    # the quarantined dir is invisible to latest_step and to future GC
+    assert ckpt.latest_step(cdir) == 2
+    # ...and the fallback restore resumes a working run
+    tr2.run(3)
+    assert tr2.epoch == 3
+
+
+def test_corruption_injector_is_crc_detectable(tmp_path):
+    """The injector flips payload bytes under an intact COMMITTED marker —
+    exactly the silent-bit-rot shape only the CRC can catch."""
+    tree = {"a": jnp.arange(64.0)}
+    ckpt.save(str(tmp_path), 5, tree)
+    chaos.corrupt_checkpoint_leaf(str(tmp_path), seed=1)
+    assert ckpt.latest_step(str(tmp_path)) == 5   # still looks committed
+    with pytest.raises(IOError):
+        ckpt.restore(str(tmp_path), 5, tree)
+
+
+# --------------------------------------------------------------------------
+# failed-save-I/O -> retry + async propagation
+# --------------------------------------------------------------------------
+
+
+def test_save_retry_rides_through_transient_io(tmp_path):
+    tr = _mk("scan", "baseline", checkpoint_dir=str(tmp_path / "ckpt"),
+             epochs=1)
+    tr.run(1)
+    with chaos.failing_leaf_writes(fail=1):
+        path = tr.save_checkpoint()
+    assert path is not None
+    restored = _mk("scan", "baseline", checkpoint_dir=str(tmp_path / "ckpt"),
+                   epochs=1)
+    assert restored.restore_latest()
+
+
+def test_save_failure_surfaces_when_disk_stays_dead(tmp_path):
+    tr = _mk("scan", "baseline", checkpoint_dir=str(tmp_path / "ckpt"),
+             epochs=1)
+    tr.run(1)
+    with chaos.failing_leaf_writes(fail=-1):
+        with pytest.raises(OSError):
+            tr.save_checkpoint()
+
+
+def test_async_save_failure_surfaces_in_run(tmp_path):
+    """An async save that dies on the worker thread must fail the run at
+    the next checkpoint boundary — never silently report success."""
+    tr = _mk("scan", "baseline", checkpoint_dir=str(tmp_path / "ckpt"),
+             epochs=2, async_checkpoint=True)
+    with chaos.failing_leaf_writes(fail=-1):
+        with pytest.raises(OSError):
+            tr.run(2)
+
+
+def test_async_checkpoint_trainer_roundtrip(tmp_path):
+    """Healthy async checkpointing: saves land, GC runs after confirmation,
+    and a restore resumes from the final epoch."""
+    cdir = str(tmp_path / "ckpt")
+    tr = _mk("scan", "kakurenbo", checkpoint_dir=cdir,
+             async_checkpoint=True)
+    tr.run(3)
+    assert tr._pending_save is None       # run() joined the trailing save
+    assert ckpt.latest_step(cdir) == 3
+    tr2 = _mk("scan", "kakurenbo", checkpoint_dir=cdir)
+    assert tr2.restore_latest()
+    assert tr2.epoch == 3
+
+
+# --------------------------------------------------------------------------
+# slow-shard -> straggler mitigation in the epoch loop
+# --------------------------------------------------------------------------
+
+
+def test_slow_shard_triggers_rebalance(caplog):
+    """A persistently slow simulated worker must be flagged from its first
+    recorded epoch and shed rows into the next epoch's plan — while the
+    epoch still trains every visible sample exactly once."""
+    # 512 samples = 2 full (workers x batch) chunks per epoch, so the
+    # rebalance actually moves rows instead of degenerating to the tail.
+    tr = _mk("scan", "baseline", num_samples=512, straggler_mitigation=True,
+             straggler_workers=4)
+    tr.shard_latency_fn = chaos.SlowShard(world_size=4, rank=1, factor=5.0)
+    with caplog.at_level(logging.WARNING, logger="repro.train"):
+        hist = tr.run(3)
+    assert list(tr._straggler.stragglers()) == [False, True, False, False]
+    assert any("straggler mitigation" in m for m in caplog.messages)
+    # rebalancing reorders the plan, it never drops or duplicates work
+    ref = _mk("scan", "baseline", num_samples=512)
+    href = ref.run(3)
+    assert ([h.fwd_samples for h in hist] == [h.fwd_samples for h in href])
+
+
+def test_straggler_mitigation_uniform_latency_is_bit_exact():
+    """With no skew the monitor never flags and the mitigation path must
+    be invisible: bit-identical params to the unmonitored trainer."""
+    tr_mon = _mk("scan", "kakurenbo", straggler_mitigation=True,
+                 straggler_workers=4)
+    tr_ref = _mk("scan", "kakurenbo")
+    tr_mon.run(3)
+    tr_ref.run(3)
+    _assert_state_equal(tr_ref, tr_mon, "uniform-latency")

@@ -241,3 +241,180 @@ def test_grad_compression_training_converges(tmp_path):
     tr._jit_steps()
     hist = tr.run(3)
     assert hist[-1].train_loss < hist[0].train_loss
+
+
+# --------------------------------------------------------------------------
+# checkpoint fallback chain + save resilience (unit level; trainer-level
+# integration lives in tests/test_chaos.py)
+# --------------------------------------------------------------------------
+
+
+def _corrupt_leaf(directory, step):
+    f = f"{directory}/step_{step:010d}/leaf_00000.npy"
+    arr = np.load(f)
+    arr = arr + 1  # payload change under an intact manifest -> CRC mismatch
+    np.save(f, arr)
+
+
+def test_restore_latest_falls_back_and_quarantines(tmp_path):
+    tree = {"a": jnp.arange(8.0)}
+    ckpt.save(str(tmp_path), 1, {"a": jnp.arange(8.0) * 1})
+    ckpt.save(str(tmp_path), 2, {"a": jnp.arange(8.0) * 2})
+    _corrupt_leaf(str(tmp_path), 2)
+    restored, _, step = ckpt.restore_latest(str(tmp_path), tree)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.arange(8.0))
+    # the corrupt dir left the committed chain but its bytes survive
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    assert (tmp_path / "corrupt_step_0000000002").is_dir()
+
+
+def test_restore_latest_reraises_when_all_corrupt(tmp_path):
+    tree = {"a": jnp.arange(8.0)}
+    ckpt.save(str(tmp_path), 1, tree)
+    _corrupt_leaf(str(tmp_path), 1)
+    with pytest.raises(IOError):
+        ckpt.restore_latest(str(tmp_path), tree)
+
+
+def test_restore_latest_structure_mismatch_no_quarantine(tmp_path):
+    """A valid checkpoint from a different config must fall back but NOT be
+    quarantined — the bytes are fine, the tree changed."""
+    like = {"a": jnp.arange(8.0)}
+    ckpt.save(str(tmp_path), 1, like)
+    ckpt.save(str(tmp_path), 2, {"a": jnp.arange(8.0), "b": jnp.zeros(2)})
+    _, _, step = ckpt.restore_latest(str(tmp_path), like)
+    assert step == 1
+    assert ckpt.latest_step(str(tmp_path)) == 2   # step 2 still committed
+
+
+def test_save_retries_transient_oserror(tmp_path):
+    from repro.train import chaos
+    tree = {"a": jnp.arange(8.0), "b": jnp.ones(3)}
+    sleeps = []
+    with chaos.failing_leaf_writes(fail=1) as calls:
+        path = ckpt.save(str(tmp_path), 1, tree, _sleep=sleeps.append)
+    # attempt 1 died on leaf 0; attempt 2 rewrote both leaves from scratch
+    assert calls["n"] == 3 and sleeps == [0.05]
+    restored, _ = ckpt.restore(str(tmp_path), 1, tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(8.0))
+    assert path.endswith("step_0000000001")
+
+
+def test_save_raises_after_retries_exhausted(tmp_path):
+    from repro.train import chaos
+    with chaos.failing_leaf_writes(fail=-1):
+        with pytest.raises(OSError):
+            ckpt.save(str(tmp_path), 1, {"a": jnp.arange(4.0)},
+                      _sleep=lambda s: None)
+    assert ckpt.latest_step(str(tmp_path)) is None   # nothing committed
+
+
+def test_save_async_failure_propagates(tmp_path):
+    from repro.train import chaos
+    with chaos.failing_leaf_writes(fail=-1):
+        h = ckpt.save_async(str(tmp_path), 1, {"a": jnp.arange(4.0)})
+        assert isinstance(h.exception(), OSError)
+        with pytest.raises(OSError):
+            h.join()
+    # a healthy handle returns the committed path from result()
+    h = ckpt.save_async(str(tmp_path), 2, {"a": jnp.arange(4.0)})
+    assert h.result().endswith("step_0000000002")
+    assert h.done() and h.exception() is None
+
+
+# --------------------------------------------------------------------------
+# supervisor: classification, backoff, restart budget window
+# --------------------------------------------------------------------------
+
+
+class _ScriptedTrainer:
+    """Supervisor-contract stub: attempt k advances to ``script[k][0]`` and
+    raises ``script[k][1]`` (None = success).  ``state`` persists epoch +
+    attempt count across rebuilds, standing in for the checkpoint dir."""
+
+    def __init__(self, state, script):
+        self.state = state
+        self.script = script
+        self.epoch = 0
+
+    def restore_latest(self):
+        self.epoch = self.state["epoch"]
+        return self.epoch > 0
+
+    def run(self, total_epochs):
+        k = self.state["attempt"]
+        self.state["attempt"] += 1
+        to_epoch, exc = self.script[min(k, len(self.script) - 1)]
+        self.epoch = max(self.epoch, to_epoch)
+        self.state["epoch"] = self.epoch
+        if exc is not None:
+            raise exc
+
+
+def _scripted(script):
+    state = {"epoch": 0, "attempt": 0}
+    return state, (lambda: _ScriptedTrainer(state, script))
+
+
+def test_classify_failure_policy():
+    from repro.train.fault import classify_failure
+    from repro.train.guard import NonFiniteError
+    from repro.train.chaos import ChaosError
+    for exc in (OSError("disk"), RuntimeError("xla"), ValueError("decode"),
+                EOFError(), ConnectionError(), NonFiniteError("nan"),
+                ChaosError("injected"), IOError("crc")):
+        assert classify_failure(exc) == "restartable", exc
+    class Unknown(Exception):
+        pass
+    for exc in (TypeError(), AttributeError(), KeyError(), IndexError(),
+                AssertionError(), NotImplementedError(), Unknown()):
+        assert classify_failure(exc) == "fatal", exc
+
+
+def test_run_with_restarts_fatal_not_retried():
+    state, make = _scripted([(0, KeyError("bug"))])
+    with pytest.raises(KeyError):
+        run_with_restarts(make, 4, sleep_fn=lambda s: None)
+    assert state["attempt"] == 1   # a programming bug never burns restarts
+
+
+def test_run_with_restarts_backoff_escalates_while_stagnant():
+    state, make = _scripted([(0, OSError()), (0, OSError()), (0, OSError()),
+                             (4, None)])
+    sleeps = []
+    _, restarts = run_with_restarts(make, 4, max_restarts=5,
+                                    sleep_fn=sleeps.append)
+    assert restarts == 3
+    assert sleeps == [0.5, 1.0, 2.0]   # base * factor**stagnant, no progress
+
+
+def test_run_with_restarts_backoff_resets_on_progress():
+    state, make = _scripted([(1, OSError()), (1, OSError()), (2, OSError()),
+                             (4, None)])
+    sleeps = []
+    _, restarts = run_with_restarts(make, 4, sleep_fn=sleeps.append)
+    assert restarts == 3
+    # crash-with-progress sleeps 0 (skipped); only the stagnant retry waits
+    assert sleeps == [0.5]
+
+
+def test_run_with_restarts_budget_is_sliding_window():
+    script = [(1, OSError()), (2, OSError()), (3, OSError()),
+              (4, OSError()), (5, None)]
+    # Without a window, the 3rd restart exceeds max_restarts=2.
+    state, make = _scripted(script)
+    with pytest.raises(OSError):
+        run_with_restarts(make, 5, max_restarts=2, sleep_fn=lambda s: None)
+    # With a 10s window and a clock ticking 6s per restart, old restarts
+    # age out and the same run completes.
+    state, make = _scripted(script)
+    t = {"now": 0.0}
+    def clock():
+        t["now"] += 6.0
+        return t["now"]
+    _, restarts = run_with_restarts(make, 5, max_restarts=2,
+                                    restart_window=10.0, clock=clock,
+                                    sleep_fn=lambda s: None)
+    assert restarts == 4
