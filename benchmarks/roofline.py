@@ -1,4 +1,15 @@
-"""§Roofline reader: aggregates the dry-run JSONs into the per-cell table."""
+"""§Roofline reader: dry-run cells + the per-PR kernel roofline records.
+
+Aggregates two sources into one CSV view:
+
+- the launch dry-run JSONs (``results/dryrun_roofline``, produced by
+  ``python -m repro.launch.dryrun``): per-(arch, shape, mesh) step-time
+  roofline cells;
+- the kernel records of ``results/BENCH_kernels.json`` (produced by
+  ``python -m benchmarks.kernel_micro --out ...``): per-kernel achieved
+  bandwidth vs the machine's measured stream ceiling
+  (``kernel_roofline`` rows of the shared schema).
+"""
 import glob
 import json
 import os
@@ -6,6 +17,7 @@ import os
 from benchmarks.common import csv_row
 
 DEFAULT_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun_roofline")
+KERNEL_BENCH = os.environ.get("KERNEL_BENCH", "results/BENCH_kernels.json")
 
 
 def rows(directory: str = DEFAULT_DIR):
@@ -23,13 +35,35 @@ def rows(directory: str = DEFAULT_DIR):
                f"useful_ratio={d.get('useful_flops_ratio') or 0:.3f}")
 
 
-def main() -> None:
-    if not os.path.isdir(DEFAULT_DIR):
-        print(csv_row("roofline/missing", 0.0,
-                      f"run `python -m repro.launch.dryrun` first ({DEFAULT_DIR})"))
+def kernel_rows(path: str = KERNEL_BENCH):
+    """CSV rows from the kernel bench snapshot (empty if not yet recorded)."""
+    if not os.path.exists(path):
         return
-    for name, us, derived in rows():
+    for rec in json.load(open(path)):
+        if rec.get("bench") != "kernel_roofline":
+            continue
+        shape = "x".join(str(v) for v in rec["shape"].values())
+        yield (f"roofline/kernel/{rec['kernel']}/{shape}",
+               rec["gbps_kernel"] * 1e3,   # MB/ms, keeps the us column sane
+               f"gbps={rec['gbps_kernel']};stream={rec['gbps_stream']};"
+               f"fraction={rec['roofline_fraction']};"
+               f"backend={rec['backend']}")
+
+
+def main() -> None:
+    printed = False
+    if os.path.isdir(DEFAULT_DIR):
+        for name, us, derived in rows():
+            print(csv_row(name, us, derived))
+            printed = True
+    for name, us, derived in kernel_rows():
         print(csv_row(name, us, derived))
+        printed = True
+    if not printed:
+        print(csv_row(
+            "roofline/missing", 0.0,
+            f"run `python -m repro.launch.dryrun` ({DEFAULT_DIR}) and/or "
+            f"`python -m benchmarks.kernel_micro --out {KERNEL_BENCH}`"))
 
 
 if __name__ == "__main__":

@@ -121,12 +121,16 @@ def _epoch_sync_counts(n: int = 4096, batch: int = 256,
 
 def strategy_sync_counts(num_samples: int = 512, batch: int = 64,
                          epochs: int = 2,
-                         guard_policy: str = "skip_update") -> list[dict]:
+                         guard_policy: str = "skip_update",
+                         fused_scoring: bool = False) -> list[dict]:
     """One tiny training run per registered strategy: every strategy must
     auto-select the scanned engine and keep plan+loop host syncs at
     1/epoch — the PlanOps acceptance bar.  Runs with the numeric guard ON
     by default: its counters ride the device carry and the epoch-end fetch,
-    so guarding must not add a single host sync."""
+    so guarding must not add a single host sync.  ``fused_scoring=True``
+    replays the sweep with the one-pass fused (loss, PA, PC) scoring
+    (``TrainConfig.fused_scoring``) — the in-step scoring swap must not
+    move a single observation to the host either."""
     import jax.numpy as jnp
 
     from repro.core import (
@@ -138,8 +142,11 @@ def strategy_sync_counts(num_samples: int = 512, batch: int = 64,
 
     model_cfg = cnn.CNNConfig(image_size=8, widths=(8,), hidden=16)
 
+    def logits_fn(params, batch_):
+        return cnn.forward(params, model_cfg, batch_["images"])
+
     def loss_fn(params, batch_):
-        logits = cnn.forward(params, model_cfg, batch_["images"])
+        logits = logits_fn(params, batch_)
         loss, pa, pc = cnn.per_sample_metrics(logits, batch_["labels"])
         w = batch_.get("weight")
         scalar = jnp.mean(loss * w) if w is not None else jnp.mean(loss)
@@ -155,16 +162,75 @@ def strategy_sync_counts(num_samples: int = 512, batch: int = 64,
                                       fraction_milestones=(0, 1, 2, 3)),
             forget=ForgetConfig(fraction=0.3, warmup_epochs=1),
             lr=LRSchedule(0.05, "cosine", epochs, 1), seed=0,
-            guard_policy=guard_policy)
-        tr = Trainer(tc, lambda r: cnn.init(r, model_cfg), loss_fn, ds, None)
+            guard_policy=guard_policy, fused_scoring=fused_scoring)
+        tr = Trainer(tc, lambda r: cnn.init(r, model_cfg),
+                     None if fused_scoring else loss_fn, ds, None,
+                     logits_fn=logits_fn)
         hist = tr.run()
         syncs = max(h.host_syncs for h in hist)
         rec = {"bench": "strategy_host_syncs", "strategy": name,
                "engine": hist[-1].engine, "host_syncs_per_epoch": syncs,
-               "guard_policy": guard_policy, "epochs": epochs}
+               "guard_policy": guard_policy, "epochs": epochs,
+               "fused_scoring": fused_scoring}
         assert rec["engine"] == "scan", rec
         assert syncs <= 1, rec
         records.append(rec)
+        print("BENCH " + json.dumps(rec))
+    return records
+
+
+def rank_plan_overhead(iters: int = 5) -> list[dict]:
+    """FORGET/DropTop rank-window plans: radix count-then-select vs the
+    argsort they replaced.
+
+    Times ``planops.topk_hide`` (now radix-routed) against the retained
+    ``stable_rank_order < k`` oracle and ``planops.sort_high_mask`` against
+    ``sort_high_mask_argsort``, asserting the masks BIT-IDENTICAL at every
+    size before recording the speedup — the Table-1 selection-cost row.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import planops
+
+    @jax.jit
+    def topk_oracle(scores, k):
+        return planops.stable_rank_order(scores) < k
+
+    records = []
+    for n in (100_000, 1_000_000):
+        r = np.random.default_rng(0)
+        scores = jnp.asarray(np.round(r.exponential(1, n), 3), jnp.float32)
+        valid = jnp.asarray(r.random(n) < 0.9)
+        k = jnp.int32(n // 3)
+
+        mask_radix = np.asarray(planops.topk_hide(scores, k))
+        mask_sort = np.asarray(topk_oracle(scores, k))
+        assert (mask_radix == mask_sort).all(), f"topk_hide parity N={n}"
+        t_radix = _bench(planops.topk_hide, scores, k, iters=iters)
+        t_sort = _bench(topk_oracle, scores, k, iters=iters)
+        rec = {"bench": "rank_plan_overhead", "plan": "forget_topk", "n": n,
+               "radix_us": round(t_radix, 1), "argsort_us": round(t_sort, 1),
+               "speedup_vs_argsort": round(t_sort / t_radix, 2),
+               "masks_identical": True}
+        records.append(rec)
+        print(csv_row(f"selection/forget_topk_radix_N{n}", t_radix,
+                      f"argsort={t_sort:.1f}us;x{t_sort / t_radix:.2f}"))
+        print("BENCH " + json.dumps(rec))
+
+        high_jit = jax.jit(planops.sort_high_mask)
+        high_oracle = jax.jit(planops.sort_high_mask_argsort)
+        m_radix = np.asarray(high_jit(scores, valid, 0.1))
+        m_sort = np.asarray(high_oracle(scores, valid, 0.1))
+        assert (m_radix == m_sort).all(), f"sort_high_mask parity N={n}"
+        t_radix = _bench(high_jit, scores, valid, 0.1, iters=iters)
+        t_sort = _bench(high_oracle, scores, valid, 0.1, iters=iters)
+        rec = {"bench": "rank_plan_overhead", "plan": "droptop_high", "n": n,
+               "radix_us": round(t_radix, 1), "argsort_us": round(t_sort, 1),
+               "speedup_vs_argsort": round(t_sort / t_radix, 2),
+               "masks_identical": True}
+        records.append(rec)
+        print(csv_row(f"selection/droptop_high_radix_N{n}", t_radix,
+                      f"argsort={t_sort:.1f}us;x{t_sort / t_radix:.2f}"))
         print("BENCH " + json.dumps(rec))
     return records
 
@@ -210,11 +276,13 @@ def main() -> None:
                 "select_us": round(t, 1), "plan_us": round(plan_us, 1),
                 "speedup_vs_sort": round(base / t, 2)}))
 
+    rank_plan_overhead()
     sync = _epoch_sync_counts()
     assert sync["host_syncs_fused"] == 1, sync
     assert sync["host_syncs_legacy"] == sync["batches"] + 1, sync
     print("BENCH " + json.dumps({"bench": "sample_state_host_syncs", **sync}))
     strategy_sync_counts()
+    strategy_sync_counts(fused_scoring=True)
 
 
 if __name__ == "__main__":

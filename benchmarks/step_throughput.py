@@ -204,6 +204,88 @@ def strategies_main(out: str | None) -> None:
     _write(records, out)
 
 
+def fused_scoring_main(out: str | None, *, batch_size: int = 1024,
+                       num_classes: int = 8192, epochs: int = 5) -> None:
+    """Fused one-pass scoring vs the model's separate jnp passes.
+
+    A wide-head classifier (``num_classes`` logits per sample, small conv
+    front-end — the LM-like regime where the (B, V) logits tensor dominates
+    the step) at batch >= 1024 makes the per-sample (loss, PA, PC) scoring
+    a measurable share: the jnp path reduces the logits ~4x (logsumexp,
+    gather, argmax, max) and re-derives the softmax in autodiff, while
+    ``TrainConfig.fused_scoring`` does one streaming pass with an analytic
+    backward (isolated, the scoring+grad alone is >2x faster at these
+    shapes).  Same model, same data, same scanned engine — the delta is the
+    scoring alone.  Appended to ``results/BENCH_steps.json``.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import LRSchedule
+
+    model_cfg = cnn.CNNConfig(image_size=8, widths=(8,), hidden=32,
+                              num_classes=num_classes)
+
+    def init_params(rng):
+        return cnn.init(rng, model_cfg)
+
+    def logits_fn(params, batch):
+        return cnn.forward(params, model_cfg, batch["images"])
+
+    def loss_fn(params, batch):
+        logits = logits_fn(params, batch)
+        loss, pa, pc = cnn.per_sample_metrics(logits, batch["labels"])
+        w = batch.get("weight")
+        scalar = jnp.mean(loss * w) if w is not None else jnp.mean(loss)
+        return scalar, (loss, pa, pc)
+
+    num_samples = 4 * batch_size
+    ds = SyntheticClassification(num_samples=num_samples, image_size=8,
+                                 num_classes=num_classes, seed=0)
+    records = []
+    cells = {}
+    for fused in (False, True):
+        tc = TrainConfig(
+            epochs=epochs, batch_size=batch_size, strategy="kakurenbo",
+            engine="scan", scan_steps=2,
+            kakurenbo=KakurenboConfig(selection="histogram", max_fraction=0.3,
+                                      fraction_milestones=(0, 1, 2, 3)),
+            lr=LRSchedule(0.05, "cosine", epochs, 1), seed=0,
+            fused_scoring=fused)
+        tr = Trainer(tc, init_params, None if fused else loss_fn, ds, None,
+                     logits_fn=logits_fn)
+        if hasattr(tr.engine, "warmup"):
+            tr.engine.warmup()
+        rates = []
+        for epoch in range(epochs):
+            indices, plan = tr._epoch_indices(epoch)
+            lr = float(tr.cfg.lr(epoch)) * plan.lr_scale
+            t0 = time.perf_counter()
+            res = tr.engine.run_epoch(epoch, indices, plan, lr)
+            dt = time.perf_counter() - t0
+            if epoch > 0:
+                rates.append(len(res.losses) / dt)
+        rec = {
+            "bench": "step_throughput_fused_scoring",
+            "fused_scoring": fused, "engine": tr.engine.name,
+            "batch_size": batch_size, "num_classes": num_classes,
+            "num_samples": num_samples,
+            "samples_per_s": round(float(np.median(rates)) * batch_size, 1),
+            "timed_epochs": epochs - 1,
+        }
+        cells[fused] = rec
+        records.append(rec)
+        print("BENCH " + json.dumps(rec))
+    speedup = {
+        "bench": "step_throughput_fused_scoring_speedup",
+        "batch_size": batch_size, "num_classes": num_classes,
+        "fused_over_jnp": round(cells[True]["samples_per_s"]
+                                / cells[False]["samples_per_s"], 3),
+    }
+    records.append(speedup)
+    print("BENCH " + json.dumps(speedup))
+    _write(records, out)
+
+
 def guard_main(out: str | None, max_overhead_pct: float = 3.0) -> None:
     """Numeric-guard overhead: the same scanned kakurenbo run with
     ``guard_policy`` off vs ``skip_update``.
@@ -282,6 +364,10 @@ if __name__ == "__main__":
     ap.add_argument("--guard", action="store_true",
                     help="bench guard_policy off vs skip_update and assert "
                          "the guard's steady-state overhead stays under 3%%")
+    ap.add_argument("--fused-scoring", action="store_true",
+                    help="bench TrainConfig.fused_scoring (one-pass fused "
+                         "loss/PA/PC) vs the jnp scoring path on a "
+                         "wide-head model at batch>=1024")
     ap.add_argument("--out", default=None,
                     help="append BENCH records to this JSON file "
                          "(e.g. results/BENCH_steps.json)")
@@ -290,6 +376,8 @@ if __name__ == "__main__":
         smoke()
     elif args.guard:
         guard_main(args.out)
+    elif args.fused_scoring:
+        fused_scoring_main(args.out)
     elif args.strategies == "all":
         strategies_main(args.out)
     else:

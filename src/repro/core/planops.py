@@ -169,7 +169,11 @@ def stable_rank_order(scores: jax.Array) -> jax.Array:
     """Rank of each sample under a *stable* ascending sort (0 = smallest).
 
     Ties break by index — FORGET's fewest-events-first order (Toneva et al.),
-    where the tie-break is part of the published recipe.
+    where the tie-break is part of the published recipe.  This is the
+    O(N log N) oracle; plans that only need a rank *window* go through
+    ``topk_hide`` / ``sort_high_mask``, which use the O(N) count-then-select
+    path of ``kernels/threshold_select.py`` and are asserted bit-identical
+    to this ranking.
     """
     n = scores.shape[0]
     order = jnp.argsort(scores, stable=True)
@@ -179,9 +183,17 @@ def stable_rank_order(scores: jax.Array) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("mesh",))
 def topk_hide(scores: jax.Array, k: jax.Array, *, mesh=None) -> jax.Array:
-    """Mask of the ``k`` smallest scores (stable ties) — FORGET's prune set."""
+    """Mask of the ``k`` smallest scores (stable ties) — FORGET's prune set.
+
+    Bit-identical to ``stable_rank_order(scores) < k`` (the retained
+    oracle), but via the radix count-then-select of
+    ``kernels/threshold_select.py``: a handful of O(N) histogram passes
+    instead of materialising a full argsort — the Table-1 selection cost
+    the paper calls out, removed from the plan step.
+    """
+    from repro.kernels import ops as kernel_ops
     scores = _rep(scores, mesh)
-    return stable_rank_order(scores) < k
+    return kernel_ops.rank_select(scores, k)
 
 
 # ---------------------------------------------------------------------------
@@ -284,7 +296,22 @@ def sort_high_mask(loss: jax.Array, valid: jax.Array,
     losses sort above every real loss), so they rank below everything.
     Non-finite losses are treated as invalid — a NaN would otherwise sort
     into the top tail and claim a drop slot.
+
+    Routed through the count-then-select path (high variant) — bit-identical
+    to the old ``argsort`` ranking (``sort_high_mask_argsort``, kept as the
+    parity oracle) without materialising it.
     """
+    from repro.kernels import ops as kernel_ops
+    valid = valid & jnp.isfinite(loss)
+    n = loss.shape[0]
+    num_top = jnp.floor(jnp.asarray(fraction) * n).astype(jnp.int32)
+    keyed = jnp.where(valid, loss, -jnp.inf)
+    return kernel_ops.rank_select(keyed, num_top, high=True) & valid
+
+
+def sort_high_mask_argsort(loss: jax.Array, valid: jax.Array,
+                           fraction: float) -> jax.Array:
+    """The pre-radix O(N log N) ``sort_high_mask`` — the parity oracle."""
     valid = valid & jnp.isfinite(loss)
     n = loss.shape[0]
     num_top = jnp.floor(jnp.asarray(fraction) * n).astype(jnp.int32)

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend
+
 NEG_INF = -1e30
 
 
@@ -60,8 +62,9 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, blk_q: int = 128, blk_k: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """q: (B,S,Hq,D); k,v: (B,S,Hkv,D). Returns (B,S,Hq,D)."""
+    interpret = backend.resolve(interpret)
     b, s, hq, d = q.shape
     hkv = k.shape[2]
     g = hq // hkv

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend
+
 NEG_INF = -1e30
 
 
@@ -60,8 +62,9 @@ def _kernel(x_ref, lab_ref, ce_ref, cor_ref, pmax_ref, m_ref, l_ref, g_ref,
 
 def loss_confidence_kernel(logits: jax.Array, labels: jax.Array,
                            blk_t: int = 256, blk_v: int = 2048,
-                           interpret: bool = True):
+                           interpret: bool | None = None):
     """logits: (T, V); labels: (T,). Returns (ce, correct_i32, pmax) f32/(T,)."""
+    interpret = backend.resolve(interpret)
     t, v = logits.shape
     blk_t = min(blk_t, t)
     blk_v = min(blk_v, v)

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend
+
 
 def _kernel(x_ref, dt_ref, dta_ref, b_ref, c_ref, y_ref, state_out_ref,
             state_ref, *, chunk: int):
@@ -69,8 +71,9 @@ def _kernel(x_ref, dt_ref, dta_ref, b_ref, c_ref, y_ref, state_out_ref,
 
 def ssd_scan_kernel(x: jax.Array, dt: jax.Array, dta: jax.Array,
                     b: jax.Array, c: jax.Array, chunk: int = 128,
-                    interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+                    interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
     """x: (BH, S, P); dt/dta: (BH, S); b/c: (BH, S, N)."""
+    interpret = backend.resolve(interpret)
     bh, s, p = x.shape
     n = b.shape[-1]
     chunk = min(chunk, s)

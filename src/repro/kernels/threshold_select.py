@@ -14,6 +14,18 @@ fixed 512-bin histogram + CDF threshold (core/selection.py, method
 
 Both return *raw* local reductions so a sharded caller can psum/pmin/pmax
 them before deriving the CDF threshold (see select_hidden_histogram).
+
+The module also hosts the *exact* count-then-select path (radix select):
+the rank-based plans — FORGET's ``topk_hide`` and DropTop's top-tail mask —
+used to pay a full ``argsort`` (the O(N log N) bottleneck the paper lists in
+Table 1) just to threshold at the k-th order statistic.  ``rank_select_mask``
+finds the exact k-th smallest sort key with four streaming 256-bin byte
+histograms (MSB-first radix passes over a monotonic f32->uint32 key map),
+then emits the mask in one more streaming pass with a running tie counter —
+five O(N) passes total, bit-identical to the stable-argsort mask including
+index tie-breaks.  ``byte_histogram_kernel`` / ``select_mask_kernel`` are
+the Pallas twins of the jnp passes; both paths share the driver, so parity
+is structural.
 """
 from __future__ import annotations
 
@@ -21,8 +33,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import backend
 
 # Sentinel for masked min/max: finite so f32 arithmetic on it stays exact
 # and (lo - hi) on an all-invalid input does not produce inf/nan.
@@ -55,8 +70,9 @@ def _kernel(loss_ref, valid_ref, range_ref, hist_ref, acc_ref, *, bins: int):
 
 def histogram_kernel(loss: jax.Array, valid: jax.Array, lo: jax.Array,
                      hi: jax.Array, bins: int = 512, blk_n: int = 2048,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: bool | None = None) -> jax.Array:
     """loss: (N,) f32; valid: (N,) bool/int. Returns (bins,) i32 histogram."""
+    interpret = backend.resolve(interpret)
     n = loss.shape[0]
     blk_n = min(blk_n, n)
     assert n % blk_n == 0, (n, blk_n)
@@ -96,13 +112,14 @@ def _minmax_kernel(loss_ref, valid_ref, out_ref, acc_ref):
 
 
 def minmax_kernel(loss: jax.Array, valid: jax.Array, blk_n: int = 2048,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: bool | None = None) -> jax.Array:
     """Range pass: (N,) loss + valid mask -> (2,) f32 raw [lo, hi].
 
     Raw means no degeneracy fold: an all-invalid input yields
     [BIG, -BIG], which the caller collapses (lo = min(lo, hi)) *after* any
     cross-shard pmin/pmax so sharded and single-device results agree.
     """
+    interpret = backend.resolve(interpret)
     n = loss.shape[0]
     blk_n = min(blk_n, n)
     assert n % blk_n == 0, (n, blk_n)
@@ -121,7 +138,7 @@ def minmax_kernel(loss: jax.Array, valid: jax.Array, blk_n: int = 2048,
 
 
 def histogram_with_range(loss: jax.Array, valid: jax.Array, bins: int = 512,
-                         blk_n: int = 2048, interpret: bool = True
+                         blk_n: int = 2048, interpret: bool | None = None
                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Fused two-pass selection front end: (hist, lo_raw, hi_raw).
 
@@ -135,3 +152,220 @@ def histogram_with_range(loss: jax.Array, valid: jax.Array, bins: int = 512,
     hist = histogram_kernel(loss, valid, lo, hi_raw, bins=bins, blk_n=blk_n,
                             interpret=interpret)
     return hist, lo_raw, hi_raw
+
+
+# ---------------------------------------------------------------------------
+# Exact count-then-select (radix select): the argsort replacement for the
+# rank-based plans (FORGET topk_hide, DropTop's top tail)
+# ---------------------------------------------------------------------------
+
+#: Radix passes walk the uint32 sort key one byte at a time, MSB first.
+RADIX_SHIFTS = (24, 16, 8, 0)
+#: Padding key for the kernel path: the largest uint32, so padded slots rank
+#: strictly after every real (non-NaN) key and can never claim a slot.
+PAD_KEY = 0xFFFFFFFF
+
+
+def float_order_keys(scores: jax.Array) -> jax.Array:
+    """Monotonic f32 -> uint32 key map: a < b  <=>  key(a) < key(b).
+
+    The standard sign-flip trick (negative floats get their bits inverted,
+    positives get the sign bit set), with ``-0.0`` collapsed onto ``+0.0``
+    first — a stable argsort treats signed zeros as ties and so must the
+    radix path.  The collapse is a select on ``x == 0``, NOT ``x + 0.0``:
+    XLA folds the add away under jit and ``-0.0`` would leak a smaller key.
+    +/-inf order correctly; NaNs map above +inf (like jnp.argsort's
+    NaNs-last) but carry payload bits, so callers that may see NaNs mask
+    them first (as ``sort_high_mask`` does).
+    """
+    x = scores.astype(jnp.float32)
+    b = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    b = jnp.where(x == 0, jnp.uint32(0), b)       # canonicalize -0.0
+    sign = (b & jnp.uint32(0x80000000)) != 0
+    return jnp.where(sign, ~b, b | jnp.uint32(0x80000000))
+
+
+def _prefix_mask(shift: int) -> jnp.ndarray:
+    """uint32 mask of the key bits already fixed by earlier radix passes."""
+    return jnp.uint32((0xFFFFFFFF << (shift + 8)) & 0xFFFFFFFF
+                      if shift < 24 else 0)
+
+
+def _byte_histogram_jnp(keys: jax.Array, prefix: jax.Array,
+                        shift: int) -> jax.Array:
+    """(256,) counts of byte ``shift`` among keys matching ``prefix``."""
+    match = (keys & _prefix_mask(shift)) == prefix
+    bucket = ((keys >> shift) & jnp.uint32(0xFF)).astype(jnp.int32)
+    return jnp.zeros((256,), jnp.int32).at[bucket].add(
+        match.astype(jnp.int32))
+
+
+def _byte_histogram_kernel(keys_ref, prefix_ref, hist_ref, acc_ref, *,
+                           shift: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k = keys_ref[...]                                # (blk_n,) uint32
+    match = (k & _prefix_mask(shift)) == prefix_ref[0]
+    bucket = ((k >> shift) & jnp.uint32(0xFF)).astype(jnp.int32)
+    # one-hot accumulate, same VPU-friendly pattern as histogram_kernel
+    onehot = (bucket[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (k.shape[0], 256), 1))
+    onehot = jnp.where(match[:, None], onehot, False)
+    acc_ref[...] += jnp.sum(onehot.astype(jnp.int32), axis=0)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _final():
+        hist_ref[...] = acc_ref[...]
+
+
+def byte_histogram_kernel(keys: jax.Array, prefix: jax.Array, shift: int,
+                          blk_n: int = 2048,
+                          interpret: bool | None = None) -> jax.Array:
+    """Streaming twin of ``_byte_histogram_jnp``; keys (N,) uint32,
+    N % blk_n == 0 (the driver pads with PAD_KEY)."""
+    interpret = backend.resolve(interpret)
+    n = keys.shape[0]
+    blk_n = min(blk_n, n)
+    assert n % blk_n == 0, (n, blk_n)
+    return pl.pallas_call(
+        functools.partial(_byte_histogram_kernel, shift=shift),
+        grid=(n // blk_n,),
+        in_specs=[
+            pl.BlockSpec((blk_n,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((256,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((256,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((256,), jnp.int32)],
+        interpret=interpret,
+    )(keys, prefix.reshape(1))
+
+
+def _select_mask_jnp(keys, thresh, tie_lo, tie_hi):
+    """mask = key < T, plus the (tie_lo, tie_hi] window of ties in index
+    order — the exact stable-argsort tie-break."""
+    tie = keys == thresh
+    cum = jnp.cumsum(tie.astype(jnp.int32))
+    return (keys < thresh) | (tie & (cum > tie_lo) & (cum <= tie_hi))
+
+
+def _select_mask_kernel(keys_ref, thresh_ref, win_ref, mask_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0] = jnp.int32(0)
+
+    k = keys_ref[...]
+    t = thresh_ref[0]
+    tie = k == t
+    cum = carry_ref[0] + jnp.cumsum(tie.astype(jnp.int32))
+    mask_ref[...] = ((k < t)
+                     | (tie & (cum > win_ref[0]) & (cum <= win_ref[1])
+                        )).astype(jnp.int32)
+    carry_ref[0] = carry_ref[0] + jnp.sum(tie.astype(jnp.int32))
+
+
+def select_mask_kernel(keys: jax.Array, thresh: jax.Array, tie_lo: jax.Array,
+                       tie_hi: jax.Array, blk_n: int = 2048,
+                       interpret: bool | None = None) -> jax.Array:
+    """Streaming twin of ``_select_mask_jnp``: one pass, a 1-scalar SMEM
+    running tie count carried across blocks.  Returns (N,) i32 0/1."""
+    interpret = backend.resolve(interpret)
+    n = keys.shape[0]
+    blk_n = min(blk_n, n)
+    assert n % blk_n == 0, (n, blk_n)
+    win = jnp.stack([jnp.asarray(tie_lo, jnp.int32),
+                     jnp.asarray(tie_hi, jnp.int32)])
+    return pl.pallas_call(
+        _select_mask_kernel,
+        grid=(n // blk_n,),
+        in_specs=[
+            pl.BlockSpec((blk_n,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((blk_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(keys, thresh.reshape(1), win)
+
+
+def radix_threshold(keys: jax.Array, k: jax.Array, hist_fn):
+    """Exact k-th smallest key via 4 MSB-first byte-histogram passes.
+
+    Returns ``(thresh, needed, total_ties)``: the k-th order statistic
+    ``thresh`` (for k <= 0 the all-zero key: nothing selected), how many of
+    the ties *at* ``thresh`` the mask still needs (``needed``), and the
+    total tie count at ``thresh``.  ``hist_fn(keys, prefix, shift)`` is the
+    jnp or Pallas byte-histogram pass — the only part the backends swap.
+    """
+    prefix = jnp.uint32(0)
+    remaining = jnp.asarray(k, jnp.int32)
+    hist = None
+    b = jnp.int32(0)
+    for shift in RADIX_SHIFTS:
+        hist = hist_fn(keys, prefix, shift)
+        cdf = jnp.cumsum(hist)
+        # bucket holding the remaining-th smallest key of the prefix subset
+        b = jnp.clip(jnp.searchsorted(cdf, remaining, side="left"), 0, 255)
+        remaining = remaining - jnp.where(b > 0, cdf[jnp.maximum(b - 1, 0)], 0)
+        prefix = prefix | (b.astype(jnp.uint32) << shift)
+    # last pass's bucket = exact-key matches: the tie population at thresh
+    return prefix, remaining, hist[b]
+
+
+def rank_select_mask(scores: jax.Array, k: jax.Array, high: bool = False,
+                     use_kernel: bool = False, blk_n: int = 2048,
+                     interpret: bool | None = None) -> jax.Array:
+    """Exact mask of the ``k`` smallest (or ``high=True``: largest) scores.
+
+    Bit-identical to the stable-argsort masks it replaces (non-NaN inputs):
+
+    - ``high=False``: ``stable_rank_order(scores) < k`` — ties at the
+      threshold value break toward *smaller* indices (stable ascending
+      sort), so the tie window takes the first ``needed`` ties;
+    - ``high=True``: ranks ``>= n - k`` of a stable ascending argsort —
+      there the threshold ties with the *largest* indices occupy the top
+      window, so the tie window takes the last ``needed`` ties (computed
+      from the same forward streaming pass via the total tie count).
+
+    Cost: 5 streaming O(N) passes (4 byte histograms + the mask pass), no
+    O(N log N) sort and no O(N)-sized gather/scatter of ranks.  ``k`` may be
+    a traced scalar.  ``use_kernel`` swaps the jnp passes for the Pallas
+    streaming kernels (same driver, structurally identical math).
+    """
+    keys = float_order_keys(scores)
+    if high:
+        keys = ~keys           # k largest = k smallest complemented keys
+    if use_kernel:
+        n = keys.shape[0]
+        blk = min(blk_n, n)
+        if n % blk:
+            keys = jnp.pad(keys, (0, blk - n % blk),
+                           constant_values=np.uint32(PAD_KEY))
+
+        def hist_fn(ks, prefix, shift):
+            return byte_histogram_kernel(ks, prefix, shift, blk_n=blk,
+                                         interpret=interpret)
+    else:
+        n = keys.shape[0]
+
+        def hist_fn(ks, prefix, shift):
+            return _byte_histogram_jnp(ks, prefix, shift)
+
+    thresh, needed, total_ties = radix_threshold(keys, k, hist_fn)
+    if high:
+        tie_lo, tie_hi = total_ties - needed, total_ties
+    else:
+        tie_lo, tie_hi = jnp.int32(0), needed
+    if use_kernel:
+        mask = select_mask_kernel(keys, thresh, tie_lo, tie_hi, blk_n=blk,
+                                  interpret=interpret)[:n]
+        return mask != 0
+    return _select_mask_jnp(keys, thresh, tie_lo, tie_hi)

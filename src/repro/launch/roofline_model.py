@@ -22,6 +22,8 @@ from repro.configs.base import ArchConfig, ShapeSpec
 
 BF16 = 2
 F32 = 4
+I32 = 4
+U32 = 4
 
 
 def _opt_bytes_per_param(optimizer: str) -> float:
@@ -82,3 +84,49 @@ def analytic_hbm_bytes(cfg: ArchConfig, shape: ShapeSpec,
         terms["logits"] = BF16 * b * V
     terms["total"] = sum(terms.values())
     return terms
+
+
+def kernel_hbm_bytes(kernel: str, **shape) -> int:
+    """Minimal HBM traffic of one Pallas kernel call, in bytes.
+
+    The per-kernel analogue of ``analytic_hbm_bytes``: every operand read
+    once + every output written once (the streaming kernels in ``kernels/``
+    are single-pass by construction, so this floor is what they should
+    actually move).  ``benchmarks/kernel_micro.py`` divides measured time by
+    these bytes for the ``gbps_kernel`` column and the roofline fraction
+    against the machine's measured stream bandwidth — the schema recorded in
+    ``results/BENCH_kernels.json``.
+
+    Shapes (keyword-only, mirroring each kernel's bench record):
+      flash_attention: b, s, hq, hkv, d     (q + k + v read, o written; f32)
+      ssd_scan:        b, s, nh, p, n       (x/dt/b/c read, y + state written)
+      loss_confidence: t, v                 (logits + labels read; 3 outs)
+      fused_scoring:   t, v                 (same traffic as loss_confidence)
+      loss_histogram:  n [, bins]           (loss + valid read, hist written)
+      loss_minmax:     n                    (loss + valid read, 2 scalars)
+      rank_select:     n                    (5 streaming passes: 4 radix
+                                             histograms + the select pass
+                                             over the uint32 keys + mask out)
+    """
+    if kernel == "flash_attention":
+        b, s, hq, hkv, d = (shape[k] for k in ("b", "s", "hq", "hkv", "d"))
+        return F32 * (b * s * hq * d * 2 + b * s * hkv * d * 2)
+    if kernel == "ssd_scan":
+        b, s, nh, p, n = (shape[k] for k in ("b", "s", "nh", "p", "n"))
+        return F32 * (b * s * nh * p * 2      # x read + y written
+                      + b * s * nh            # dt
+                      + b * s * n * 2         # b + c
+                      + b * nh * n * p)       # final state written
+    if kernel in ("loss_confidence", "fused_scoring"):
+        t, v = shape["t"], shape["v"]
+        return F32 * t * v + I32 * t + 3 * F32 * t
+    if kernel == "loss_histogram":
+        n = shape["n"]
+        return F32 * n + n + I32 * shape.get("bins", 512)
+    if kernel == "loss_minmax":
+        n = shape["n"]
+        return F32 * n + n + 2 * F32
+    if kernel == "rank_select":
+        n = shape["n"]
+        return 5 * U32 * n + n
+    raise ValueError(f"no HBM byte model for kernel {kernel!r}")

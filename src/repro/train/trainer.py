@@ -96,6 +96,16 @@ class TrainConfig:
     # the legacy per-batch host observe() path — kept for the differential
     # parity test; both paths are bit-identical.
     fused_observe: bool = True
+    # Fused in-step scoring: derive the per-sample (loss, PA, PC) triple
+    # from the model's logits in ONE streaming online-softmax pass
+    # (``kernels/ops.fused_loss_metrics`` — the Pallas kernel on TPU, its
+    # fused jnp twin elsewhere) instead of the model's separate
+    # logsumexp/argmax/softmax reductions.  Requires the Trainer's
+    # ``logits_fn(params, batch) -> (B, V) logits``; the trainer then builds
+    # the ``loss_fn`` contract itself (weighted-mean CE scalar + the
+    # metrics triple feeding the fused_observe scatter), so the 1-sync/epoch
+    # engine contract and the guard/quarantine paths are untouched.
+    fused_scoring: bool = False
     # Mesh-sharded data-parallel mode: e.g. (8,) trains over a ("data",)
     # mesh of 8 devices (host-simulated on CPU via
     # XLA_FLAGS=--xla_force_host_platform_device_count=8). None = the
@@ -183,21 +193,60 @@ class EpochStats:
     quarantined_observations: int = 0
 
 
+def _fused_scoring_loss_fn(logits_fn: Callable) -> Callable:
+    """Build the trainer's ``loss_fn`` contract from a raw logits function.
+
+    The fused-scoring hot path (``TrainConfig.fused_scoring``): one
+    streaming online-softmax pass over the (B, V) logits yields the full
+    per-sample (ce, pa, pc) triple — Pallas kernel where it compiles, fused
+    one-pass jnp twin elsewhere, analytic vjp either way (see
+    ``kernels/ops.fused_loss_metrics``).  The scalar is the (optionally
+    weighted) mean CE, matching the convention every hand-written loss_fn
+    in the repo uses, so engines/guard/mesh code is agnostic to which
+    scoring built the triple.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    def loss_fn(params, batch):
+        logits = logits_fn(params, batch)
+        ce, pa, pc = kernel_ops.fused_loss_metrics(logits, batch["labels"])
+        w = batch.get("weight")
+        scalar = jnp.mean(ce * w) if w is not None else jnp.mean(ce)
+        return scalar, (ce, pa, pc)
+
+    return loss_fn
+
+
 class Trainer:
     """``loss_fn(params, batch) -> (scalar, (loss_vec, pa, pc))``;
     ``batch`` = dataset.get(indices) arrays (+ optional 'weight')."""
 
     def __init__(self, cfg: TrainConfig,
                  init_params: Callable[[jax.Array], Any],
-                 loss_fn: Callable[[Any, dict], tuple],
+                 loss_fn: Callable[[Any, dict], tuple] | None,
                  dataset, test_dataset=None,
                  num_classes: int | None = None,
                  feats_fn: Callable | None = None,
-                 strategy: SampleStrategy | None = None):
+                 strategy: SampleStrategy | None = None,
+                 logits_fn: Callable[[Any, dict], jax.Array] | None = None):
         self.cfg = cfg
         self.dataset = dataset
         self.test_dataset = test_dataset
-        self.loss_fn = loss_fn
+        self.logits_fn = logits_fn
+        if cfg.fused_scoring:
+            if logits_fn is None:
+                raise ValueError(
+                    "TrainConfig.fused_scoring=True requires the Trainer's "
+                    "logits_fn argument (params, batch) -> (B, V) logits — "
+                    "the fused scoring pass derives (loss, PA, PC) from raw "
+                    "logits, not from a pre-built loss_fn")
+            self.loss_fn = _fused_scoring_loss_fn(logits_fn)
+        elif loss_fn is None:
+            raise ValueError(
+                "loss_fn is required unless fused_scoring=True builds it "
+                "from logits_fn")
+        else:
+            self.loss_fn = loss_fn
         self._init_params = init_params
         self.opt: Optimizer = make_optimizer(cfg.optimizer, **cfg.optimizer_hp)
         self.pipeline = Pipeline(dataset.get, cfg.batch_size)

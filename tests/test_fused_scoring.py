@@ -1,0 +1,291 @@
+"""Fused in-step scoring + rank-select routing: the kernel hot-path bars.
+
+Three contracts from the fused-kernels PR:
+
+- ``ops.fused_loss_metrics`` (one streaming online-softmax pass, analytic
+  vjp) matches the three-pass jnp oracle — values AND gradients — on
+  degenerate shapes: T not a multiple of the token block, V not a multiple
+  of the vocab block, gold labels sitting exactly on vocab-tile boundaries,
+  and kernel padding rows;
+- ``TrainConfig.fused_scoring`` trains bit-identically across epoch engines
+  and fails fast without a ``logits_fn``;
+- the radix count-then-select behind ``planops.topk_hide`` /
+  ``planops.sort_high_mask`` is bit-identical to the stable-argsort oracles
+  it replaced (ties, both tails, kernel and jnp paths), and the backend
+  probe honours the ``REPRO_PALLAS_INTERPRET`` override.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import KakurenboConfig, LRSchedule, planops
+from repro.data import SyntheticClassification
+from repro.kernels import backend, ops, ref
+from repro.kernels.threshold_select import rank_select_mask
+from repro.models import cnn
+
+
+def _logits(t, v, seed=0, scale=3.0):
+    r = np.random.default_rng(seed)
+    lg = jnp.asarray(r.normal(size=(t, v)) * scale, jnp.float32)
+    lab = jnp.asarray(r.integers(0, v, t), jnp.int32)
+    return lg, lab
+
+
+# ---------------------------------------------------------------------------
+# fused_loss_metrics: forward parity on degenerate shapes
+# ---------------------------------------------------------------------------
+
+
+# blk_t=256, blk_v=2048 in ops._padded_kernel_metrics: cover non-multiples of
+# both, tiny shapes, and exact block multiples.
+SHAPES = [(64, 512), (100, 1000), (256, 2048), (300, 2049), (7, 33)]
+
+
+@pytest.mark.parametrize("t,v", SHAPES)
+@pytest.mark.parametrize("scoring", ["reference", "kernel"])
+def test_fused_matches_three_pass_oracle(t, v, scoring):
+    lg, lab = _logits(t, v)
+    ce, pa, pc = ops.fused_loss_metrics(lg, lab, scoring=scoring)
+    ce_o, pa_o, pc_o = ref.loss_confidence_ref(lg, lab)
+    np.testing.assert_allclose(np.asarray(ce), np.asarray(ce_o),
+                               rtol=1e-4, atol=1e-5)
+    assert (np.asarray(pa) == np.asarray(pa_o)).all()
+    np.testing.assert_allclose(np.asarray(pc), np.asarray(pc_o),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_fused_boundary_gold_labels():
+    """Gold labels on vocab-tile edges (0, blk_v-1, blk_v, V-1): the kernel's
+    per-tile one-hot gather must pick them up in whichever tile they land."""
+    t, v = 256, 4096          # exactly 2 vocab tiles of blk_v=2048
+    lg, _ = _logits(t, v, seed=1)
+    edges = [0, 2047, 2048, 4095]
+    lab = jnp.asarray([edges[i % 4] for i in range(t)], jnp.int32)
+    for scoring in ("reference", "kernel"):
+        ce, pa, pc = ops.fused_loss_metrics(lg, lab, scoring=scoring)
+        ce_o, pa_o, pc_o = ref.loss_confidence_ref(lg, lab)
+        np.testing.assert_allclose(np.asarray(ce), np.asarray(ce_o),
+                                   rtol=1e-4, atol=1e-5)
+        assert (np.asarray(pa) == np.asarray(pa_o)).all()
+
+
+def test_fused_kernel_padding_rows_are_invisible():
+    """T % blk_t != 0 pads the kernel grid with zero rows; the sliced
+    outputs must equal an unpadded run of the same rows."""
+    lg, lab = _logits(300, 512, seed=2)   # pads to 512 rows internally
+    full = ops.fused_loss_metrics(lg, lab, scoring="kernel")
+    half = ops.fused_loss_metrics(lg[:100], lab[:100], scoring="kernel")
+    for a, b in zip(half, full):
+        assert (np.asarray(a) == np.asarray(b)[:100]).all()
+
+
+def test_fused_scoring_rejects_unknown_backend():
+    lg, lab = _logits(8, 16)
+    with pytest.raises(ValueError, match="scoring"):
+        ops.fused_loss_metrics(lg, lab, scoring="magic")
+
+
+# ---------------------------------------------------------------------------
+# fused_loss_metrics: the analytic vjp
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scoring", ["reference", "kernel"])
+def test_fused_grad_matches_autodiff_oracle(scoring):
+    lg, lab = _logits(64, 1000, seed=3)
+    w = jnp.asarray(np.random.default_rng(4).random(64), jnp.float32)
+
+    def fused(a):
+        return jnp.mean(ops.fused_loss_metrics(a, lab, scoring=scoring)[0]
+                        * w)
+
+    def oracle(a):
+        return jnp.mean(ref.loss_confidence_ref(a, lab)[0] * w)
+
+    g_f = jax.grad(fused)(lg)
+    g_o = jax.grad(oracle)(lg)
+    np.testing.assert_allclose(np.asarray(g_f), np.asarray(g_o),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_fused_grad_composes_with_jit_and_aux():
+    """value_and_grad(has_aux=True) through the custom_vjp inside jit — the
+    exact shape the train step uses (int labels take a float0 cotangent)."""
+    lg, lab = _logits(32, 100, seed=5)
+
+    @jax.jit
+    def step(a):
+        def f(a_):
+            ce, pa, pc = ops.fused_loss_metrics(a_, lab)
+            return jnp.mean(ce), (ce, pa, pc)
+        return jax.value_and_grad(f, has_aux=True)(a)
+
+    (scalar, (ce, pa, pc)), g = step(lg)
+    assert np.isfinite(float(scalar))
+    assert g.shape == lg.shape and np.isfinite(np.asarray(g)).all()
+    # softmax-minus-onehot rows sum to ~0 under a uniform mean weighting
+    assert abs(float(jnp.sum(g))) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# TrainConfig.fused_scoring: trainer integration
+# ---------------------------------------------------------------------------
+
+
+MODEL = cnn.CNNConfig(image_size=8, widths=(8,), hidden=16)
+
+
+def _trainer(engine, fused, epochs=2):
+    from repro.train import Trainer, TrainConfig
+
+    def logits_fn(params, batch):
+        return cnn.forward(params, MODEL, batch["images"])
+
+    def loss_fn(params, batch):
+        logits = logits_fn(params, batch)
+        loss, pa, pc = cnn.per_sample_metrics(logits, batch["labels"])
+        w = batch.get("weight")
+        scalar = jnp.mean(loss * w) if w is not None else jnp.mean(loss)
+        return scalar, (loss, pa, pc)
+
+    tc = TrainConfig(
+        epochs=epochs, batch_size=64, strategy="kakurenbo", engine=engine,
+        kakurenbo=KakurenboConfig(selection="histogram", max_fraction=0.3,
+                                  fraction_milestones=(0, 1, 2, 3)),
+        lr=LRSchedule(0.05, "cosine", epochs, 1), seed=0,
+        fused_scoring=fused)
+    ds = SyntheticClassification(num_samples=256, image_size=8, seed=0)
+    return Trainer(tc, lambda r: cnn.init(r, MODEL),
+                   None if fused else loss_fn, ds, None,
+                   logits_fn=logits_fn)
+
+
+def test_fused_scoring_scan_vs_host_bit_identical():
+    th = _trainer("host", fused=True)
+    hh = th.run()
+    ts = _trainer("scan", fused=True)
+    hs = ts.run()
+    assert [h.train_loss for h in hh] == [h.train_loss for h in hs]
+    for a, b in zip(jax.tree.leaves(th.params), jax.tree.leaves(ts.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # the scoring swap keeps the scanned engine + 1 host sync/epoch contract
+    assert all(h.engine == "scan" and h.host_syncs == 1 for h in hs)
+
+
+def test_fused_scoring_tracks_jnp_scoring():
+    """Fused and jnp scoring may differ in reduction order (not bit-equal)
+    but must train to numerically indistinguishable trajectories."""
+    lf = [h.train_loss for h in _trainer("scan", fused=True).run()]
+    lj = [h.train_loss for h in _trainer("scan", fused=False).run()]
+    np.testing.assert_allclose(lf, lj, rtol=1e-4)
+
+
+def test_fused_scoring_requires_logits_fn():
+    from repro.train import Trainer, TrainConfig
+    ds = SyntheticClassification(num_samples=64, image_size=8, seed=0)
+    tc = TrainConfig(fused_scoring=True)
+    with pytest.raises(ValueError, match="logits_fn"):
+        Trainer(tc, lambda r: cnn.init(r, MODEL), None, ds, None)
+    with pytest.raises(ValueError, match="loss_fn"):
+        Trainer(TrainConfig(), lambda r: cnn.init(r, MODEL), None, ds, None)
+
+
+# ---------------------------------------------------------------------------
+# rank-select routing: bit-identity with the argsort oracles
+# ---------------------------------------------------------------------------
+
+
+DISTS = {
+    "exp": lambda r, n: r.exponential(1, n),
+    "ties": lambda r, n: np.round(r.exponential(1, n), 1),
+    "constant": lambda r, n: np.full(n, 3.5),
+    "negative": lambda r, n: np.linspace(-5, 5, n),
+    "zeros": lambda r, n: np.where(r.random(n) < 0.3, -0.0, 0.0),
+}
+
+
+@pytest.mark.parametrize("dist", sorted(DISTS))
+def test_topk_hide_matches_stable_rank_oracle(dist):
+    n = 1000
+    scores = jnp.asarray(DISTS[dist](np.random.default_rng(0), n),
+                         jnp.float32)
+    rank = np.asarray(planops.stable_rank_order(scores))
+    for k in (0, 1, n // 3, n, n + 5):
+        got = np.asarray(planops.topk_hide(scores, jnp.int32(k)))
+        assert (got == (rank < k)).all(), (dist, k)
+
+
+@pytest.mark.parametrize("dist", sorted(DISTS))
+def test_sort_high_mask_matches_argsort_oracle(dist):
+    n = 1000
+    r = np.random.default_rng(1)
+    loss = jnp.asarray(DISTS[dist](r, n), jnp.float32)
+    valid = jnp.asarray(r.random(n) < 0.8)
+    for frac in (0.0, 0.1, 0.5, 1.0):
+        got = np.asarray(planops.sort_high_mask(loss, valid, frac))
+        want = np.asarray(planops.sort_high_mask_argsort(loss, valid, frac))
+        assert (got == want).all(), (dist, frac)
+
+
+def test_sort_high_mask_nan_and_inf_stay_out_of_top():
+    loss = jnp.asarray([1.0, np.nan, np.inf, 2.0, -np.inf, 3.0], jnp.float32)
+    valid = jnp.ones(6, bool)
+    got = np.asarray(planops.sort_high_mask(loss, valid, 0.5))
+    want = np.asarray(planops.sort_high_mask_argsort(loss, valid, 0.5))
+    assert (got == want).all()
+    assert not got[1]          # NaN is invalid, never in the drop window
+
+
+@pytest.mark.parametrize("n", [256, 777])
+@pytest.mark.parametrize("high", [False, True])
+def test_rank_select_kernel_path_matches_jnp_path(n, high):
+    """The Pallas histogram/select kernels (interpret) against the pure-jnp
+    radix twin — including N not a multiple of the block."""
+    scores = jnp.asarray(
+        np.round(np.random.default_rng(2).exponential(1, n), 1), jnp.float32)
+    for k in (0, 1, n // 2, n):
+        a = np.asarray(rank_select_mask(scores, jnp.int32(k), high=high,
+                                        use_kernel=False))
+        b = np.asarray(rank_select_mask(scores, jnp.int32(k), high=high,
+                                        use_kernel=True, blk_n=256,
+                                        interpret=True))
+        assert (a == b).all(), (n, high, k)
+
+
+# ---------------------------------------------------------------------------
+# backend probe
+# ---------------------------------------------------------------------------
+
+
+def test_backend_probe_env_override(monkeypatch):
+    try:
+        monkeypatch.setenv(backend.ENV_VAR, "0")
+        backend.probe_cache_clear()
+        assert backend.use_interpret() is False
+        assert backend.backend_name() == "pallas"
+        assert backend.scoring_backend() == "kernel"
+        monkeypatch.setenv(backend.ENV_VAR, "1")
+        backend.probe_cache_clear()
+        assert backend.use_interpret() is True
+        assert backend.backend_name() == "interpret"
+        assert backend.scoring_backend() == "reference"
+        monkeypatch.delenv(backend.ENV_VAR)
+        backend.probe_cache_clear()
+        # unset: probe the jax backend (not a TPU in this container)
+        assert backend.use_interpret() is (jax.default_backend() != "tpu")
+    finally:
+        backend.probe_cache_clear()
+
+
+def test_resolve_explicit_wins_over_probe(monkeypatch):
+    try:
+        monkeypatch.setenv(backend.ENV_VAR, "0")
+        backend.probe_cache_clear()
+        assert backend.resolve(None) is False
+        assert backend.resolve(True) is True
+    finally:
+        backend.probe_cache_clear()

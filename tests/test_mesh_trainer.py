@@ -38,8 +38,11 @@ from repro.train import Trainer, TrainConfig
 
 MODEL = cnn.CNNConfig(image_size=8, widths=(8,), hidden=16)
 
+def logits_fn(params, batch):
+    return cnn.forward(params, MODEL, batch["images"])
+
 def loss_fn(params, batch):
-    logits = cnn.forward(params, MODEL, batch["images"])
+    logits = logits_fn(params, batch)
     loss, pa, pc = cnn.per_sample_metrics(logits, batch["labels"])
     w = batch.get("weight")
     scalar = jnp.mean(loss * w) if w is not None else jnp.mean(loss)
@@ -58,7 +61,8 @@ def make_trainer(mesh_shape, epochs=3, selection="histogram",
                      grad_compression=compression, fused_observe=fused,
                      seed=0, checkpoint_dir=checkpoint_dir,
                      checkpoint_every=1 if checkpoint_dir else 0, **tc_kw)
-    return Trainer(tc, lambda r: cnn.init(r, MODEL), loss_fn, ds, None)
+    return Trainer(tc, lambda r: cnn.init(r, MODEL), loss_fn, ds, None,
+                   logits_fn=logits_fn)
 
 def run(mesh_shape, **kw):
     tr = make_trainer(mesh_shape, **kw)
@@ -241,6 +245,22 @@ assert_bit_identical(a, b, {strategy!r})
 # device planning keeps the 1-host-sync/epoch contract under the mesh
 assert all(r["host_syncs"] == 1 for r in a[0]), a[0]
 assert all(r["host_syncs"] == 1 for r in b[0]), b[0]
+print("MESH_OK")
+""")
+
+
+def test_mesh_fused_scoring_size_invariant():
+    """(1,) vs (8,) meshes with TrainConfig.fused_scoring=True: the one-pass
+    fused (loss, PA, PC) scoring rides the chunk-major fold like any
+    loss_fn, so masks, orders, losses and final params stay bit-identical
+    across mesh sizes — and the 1-host-sync/epoch contract holds."""
+    _run("""
+a = run((1,), fused_scoring=True)
+b = run((8,), fused_scoring=True)
+assert_bit_identical(a, b, "fused-scoring")
+assert all(r["host_syncs"] == 1 for r in a[0]), a[0]
+assert all(r["host_syncs"] == 1 for r in b[0]), b[0]
+assert len(a[0][-1]["hidden"]) > 0
 print("MESH_OK")
 """)
 
